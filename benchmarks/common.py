@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing (paper §V setup: Llama2-13B on 4xA100-40G)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.core.baselines import SIM_MODE, hardware_for, make_scheduler
+from repro.core.batcher import MemoryBudget
+from repro.core.request import TaskType
+from repro.core.simulator import A100X4, CostModel, SimResult, Simulator
+from repro.data.workload import WorkloadSpec, generate
+
+CFG = get_config("llama2-13b")
+SYSTEMS = ["bucketserve", "distserve", "uellm", "orca", "static"]
+PAPER_SYSTEMS = ["bucketserve", "distserve", "uellm"]
+
+
+def run_system(name: str, spec: WorkloadSpec, *, seed: int = 0,
+               time_limit: float = 3600.0, **sched_kw):
+    spec = dataclasses.replace(spec, seed=seed)
+    reqs = generate(spec)
+    hw, nd, nexec = hardware_for(name, A100X4)
+    budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes, n_devices=nd,
+                          weight_bytes=CFG.param_count() * 2)
+    sched = make_scheduler(name, CFG, budget, **sched_kw)
+    sim = Simulator(sched, CostModel(CFG, hw), mode=SIM_MODE[name])
+    t0 = time.perf_counter()
+    res = sim.run(reqs, time_limit=time_limit)
+    wall = time.perf_counter() - t0
+    return res, nexec, wall
+
+
+def offline_spec(dataset: str, n: int) -> WorkloadSpec:
+    """Offline: the full request set is queued up-front (paper Fig. 5a)."""
+    return WorkloadSpec(dataset=dataset, rps=1e6, n_requests=n,
+                        max_model_len=CFG.max_seq_len,
+                        task_type=TaskType.OFFLINE)
+
+
+def online_spec(dataset: str, rps: float, n: int = 200) -> WorkloadSpec:
+    return WorkloadSpec(dataset=dataset, rps=rps, n_requests=n,
+                        max_model_len=CFG.max_seq_len,
+                        task_type=TaskType.ONLINE)
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()

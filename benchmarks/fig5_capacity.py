@@ -1,0 +1,37 @@
+"""Fig. 5e/5f: server RPS vs. client RPS (system load capacity).
+
+Paper claims: BucketServe tracks the ideal y=x line furthest; 1.975x
+UELLM capacity on Alpaca, 1.4x DistServe / 3.47x UELLM on Mixed.
+"""
+from __future__ import annotations
+
+from .common import PAPER_SYSTEMS, emit, online_spec, run_system
+
+CLIENT_RPS = [0.5, 1, 2, 3, 4, 6, 8]
+
+
+def main():
+    rows = []
+    peak = {}
+    for dataset in ("alpaca", "mixed"):
+        for name in PAPER_SYSTEMS:
+            best = 0.0
+            for rps in CLIENT_RPS:
+                res, _, _ = run_system(name, online_spec(dataset, rps, n=150))
+                srv = res.server_rps()
+                best = max(best, srv)
+                rows.append(["fig5ef_capacity", dataset, name, rps,
+                             round(srv, 3)])
+            peak[(dataset, name)] = best
+    emit(rows, ["table", "dataset", "system", "client_rps", "server_rps"])
+    for dataset, base, paper in (("alpaca", "uellm", 1.975),
+                                 ("mixed", "distserve", 1.4),
+                                 ("mixed", "uellm", 3.47)):
+        ratio = peak[(dataset, "bucketserve")] / max(peak[(dataset, base)],
+                                                     1e-9)
+        print(f"fig5ef_ratio,{dataset}_vs_{base},{ratio:.2f},paper={paper}")
+    print()
+
+
+if __name__ == "__main__":
+    main()

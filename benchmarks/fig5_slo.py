@@ -1,0 +1,70 @@
+"""Fig. 5c/5d: SLO attainment vs. server RPS (Alpaca and Mixed).
+
+Paper claim: at 80% attainment BucketServe sustains 1.37x (Alpaca) and
+1.93x (Mixed) the RPS of DistServe.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import PAPER_SYSTEMS, emit, online_spec, run_system
+
+RPS_GRID = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0]
+
+
+def attainment_curve(name: str, dataset: str):
+    out = []
+    for rps in RPS_GRID:
+        res, _, _ = run_system(name, online_spec(dataset, rps, n=300))
+        out.append((rps, res.slo_attainment(), res.server_rps()))
+    return out
+
+
+def rps_at(curve, target: float) -> float:
+    """Server RPS where the attainment curve crosses `target`
+    (linear interpolation between grid points)."""
+    best = 0.0
+    for (r0, a0, s0), (r1, a1, s1) in zip(curve, curve[1:]):
+        if a0 >= target:
+            best = max(best, s0)
+        if a0 >= target > a1 and a0 > a1:
+            frac = (a0 - target) / (a0 - a1)
+            best = max(best, s0 + frac * (s1 - s0))
+    if curve and curve[-1][1] >= target:
+        best = max(best, curve[-1][2])
+    return best
+
+
+def main():
+    rows = []
+    capacity = {}
+    for dataset in ("alpaca", "mixed"):
+        for name in PAPER_SYSTEMS:
+            curve = attainment_curve(name, dataset)
+            for rps, att, srv in curve:
+                rows.append(["fig5cd_slo", dataset, name, rps,
+                             round(att, 3), round(srv, 3)])
+            capacity[(dataset, name)] = rps_at(curve, 0.8)
+    emit(rows, ["table", "dataset", "system", "client_rps", "slo_attainment",
+                "server_rps"])
+    for dataset, paper in (("alpaca", 1.37), ("mixed", 1.93)):
+        ours = capacity[(dataset, "bucketserve")]
+        dist = capacity[(dataset, "distserve")]
+        ratio = ours / max(dist, 1e-9)
+        print(f"fig5cd_ratio,rps_at_80pct_{dataset},"
+              f"bucketserve={ours:.2f},distserve={dist:.2f},"
+              f"ratio={ratio:.2f},paper={paper}")
+        # past-knee robustness: attainment at 1.4x the knee load — where
+        # bucketing is active (deep queues) the systems separate sharply
+        knee = max(RPS_GRID[0],
+                   min(RPS_GRID[-1], 1.4 * max(dist, RPS_GRID[0])))
+        for name in PAPER_SYSTEMS:
+            res, _, _ = run_system(name, online_spec(dataset, knee, n=300))
+            print(f"fig5cd_pastknee,{dataset},{name},client_rps={knee:.2f},"
+                  f"attainment={res.slo_attainment():.3f},"
+                  f"server_rps={res.server_rps():.2f}")
+    print()
+
+
+if __name__ == "__main__":
+    main()

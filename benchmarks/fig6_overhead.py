@@ -1,0 +1,66 @@
+"""Fig. 6a/6b: execution-time breakdown + bucketing overhead scaling.
+
+Paper claims: decode ≈ 90% of e2e time; bucketing+batching overhead < 1%
+of total; overhead stays flat as the bucket count grows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.bucket import BucketManager
+from repro.core.request import Request, TaskType
+
+from .common import emit, online_spec, run_system
+
+
+def breakdown():
+    rows = []
+    for rps in (2, 8, 32):
+        res, _, _ = run_system("bucketserve", online_spec("mixed", rps))
+        tot = (res.prefill_time_total + res.decode_time_total
+               + res.transfer_time_total + res.bucketing_overhead_s)
+        rows.append(["fig6a_breakdown", rps,
+                     round(res.prefill_time_total / tot, 4),
+                     round(res.decode_time_total / tot, 4),
+                     round(res.transfer_time_total / tot, 4),
+                     round(res.bucketing_overhead_s / tot, 6),
+                     round(res.bucketing_overhead_s / res.makespan, 6)])
+    emit(rows, ["table", "rps", "prefill_frac", "decode_frac",
+                "transfer_frac", "bucketing_frac", "overhead_vs_makespan"])
+
+
+def overhead_scaling():
+    """Algorithm 1 wall cost vs. number of buckets (paper Fig. 6b)."""
+    rows = []
+    rng = np.random.default_rng(0)
+    for target_buckets in (1, 2, 4, 8, 16, 32):
+        bm = BucketManager(32768)
+        lens = np.clip(rng.lognormal(5.5, 1.6, 4096), 1, 32767).astype(int)
+        reqs = [Request(rid=i, prompt_len=int(s), max_new_tokens=8,
+                        arrival=0.0, task_type=TaskType.OFFLINE)
+                for i, s in enumerate(lens)]
+        t0 = time.perf_counter()
+        for r in reqs:
+            bm.add(r)
+        # force splits down to the target bucket count
+        while len(bm.buckets) < target_buckets:
+            before = len(bm.buckets)
+            bm.adjust(n_max=max(1, bm.total() // (2 * target_buckets)))
+            if len(bm.buckets) == before:
+                break
+        wall = time.perf_counter() - t0
+        rows.append(["fig6b_overhead", len(bm.buckets),
+                     round(wall * 1e6 / len(reqs), 3),
+                     round(wall * 1e3, 3)])
+    emit(rows, ["table", "n_buckets", "us_per_request", "total_ms"])
+
+
+def main():
+    breakdown()
+    overhead_scaling()
+
+
+if __name__ == "__main__":
+    main()

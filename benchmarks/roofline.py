@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run sweep (results/dryrun.json).
+
+Per (arch x shape) on the single-pod mesh: the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the kernel-fused
+variant.  Falls back to a note when the sweep JSON is absent.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
+
+
+def load():
+    try:
+        with open(RESULTS) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+
+
+def main():
+    data = load()
+    if not data:
+        print("roofline,NO_DATA,run `python -m repro.launch.dryrun --all`")
+        return
+    hdr = ["table", "arch", "shape", "mesh", "variant", "compute_s",
+           "memory_s", "collective_s", "dominant", "useful_ratio",
+           "fused_memory_s", "fused_dominant", "temp_GiB_per_dev", "status"]
+    print(",".join(hdr))
+    for key in sorted(data):
+        rec = data[key]
+        arch, shape, mesh = key.split("|")
+        if "skipped" in rec:
+            print(f"roofline,{arch},{shape},{mesh},,,,,,,,,SKIP:"
+                  f"{rec['skipped'][:40].replace(',', ';')}")
+            continue
+        if "error" in rec:
+            print(f"roofline,{arch},{shape},{mesh},,,,,,,,,"
+                  f"ERROR:{rec['error'][:40].replace(',', ';')}")
+            continue
+        r, rf = rec["roofline"], rec["roofline_fused"]
+        print(",".join(str(x) for x in [
+            "roofline", arch, shape, mesh, rec.get("variant", ""),
+            f"{r['compute_s']:.4f}", f"{r['memory_s']:.4f}",
+            f"{r['collective_s']:.4f}", r["dominant"],
+            f"{r['useful_ratio']:.3f}", f"{rf['memory_s']:.4f}",
+            rf["dominant"],
+            f"{rec['memory']['temp_bytes'] / 2**30:.2f}", "ok"]))
+    print()
+
+
+if __name__ == "__main__":
+    main()

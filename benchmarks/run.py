@@ -1,0 +1,46 @@
+"""Benchmark entrypoint: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5_offline,...]
+
+Prints CSV blocks (``table,...`` rows) plus derived paper-claim ratios.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
+               fig6_overhead, kv_quant, roofline, waste_model)
+
+TABLES = {
+    "fig5_offline": fig5_offline.main,     # Fig. 5a/5b
+    "fig5_slo": fig5_slo.main,             # Fig. 5c/5d
+    "fig5_capacity": fig5_capacity.main,   # Fig. 5e/5f
+    "fig6_overhead": fig6_overhead.main,   # Fig. 6a/6b
+    "waste_model": waste_model.main,       # Eqs. (2)-(4)
+    "arch_sweep": arch_sweep.main,         # beyond-paper: all 10 archs
+    "kv_quant": kv_quant.main,             # beyond-paper: int8 KV cache
+    "roofline": roofline.main,             # §Roofline (dry-run derived)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+    for name, fn in TABLES.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"### {name}")
+        try:
+            fn()
+        except Exception as e:  # keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"### {name} done in {time.time() - t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

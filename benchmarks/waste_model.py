@@ -1,0 +1,55 @@
+"""Analytic waste model (paper Eqs. 2-4): does midpoint bisection approach
+the Eq.-(4) optimum, and how much padding does bucketing remove?"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import analysis
+from repro.core.bucket import BucketManager
+from repro.core.request import Request, TaskType
+from repro.data.workload import WorkloadSpec, generate
+
+from .common import CFG, emit
+
+
+def main():
+    rows = []
+    for dataset in ("alpaca", "longbench", "mixed"):
+        spec = WorkloadSpec(dataset=dataset, rps=1e6, n_requests=4096,
+                            max_model_len=CFG.max_seq_len)
+        lens = np.array([r.prompt_len for r in generate(spec)])
+
+        single = analysis.expected_waste(lens, [0, CFG.max_seq_len])
+
+        bm = BucketManager(CFG.max_seq_len)          # paper: bisection
+        for i, s in enumerate(lens):
+            bm.add(Request(rid=i, prompt_len=int(s), max_new_tokens=8,
+                           arrival=0.0, task_type=TaskType.OFFLINE))
+        for _ in range(6):
+            bm.adjust(n_max=256)
+        mid = analysis.expected_waste(lens, bm.boundaries())
+
+        bm2 = BucketManager(CFG.max_seq_len, refine="eq4",
+                            trigger="waste")          # beyond-paper
+        for i, s in enumerate(lens):
+            bm2.add(Request(rid=i, prompt_len=int(s), max_new_tokens=8,
+                            arrival=0.0, task_type=TaskType.OFFLINE))
+        for _ in range(6):
+            bm2.adjust(n_max=256)
+        eq4 = analysis.expected_waste(lens, bm2.boundaries())
+
+        k = max(len(bm.buckets), len(bm2.buckets), 2)
+        lloyd = analysis.expected_waste(
+            lens, analysis.optimal_boundaries_kmeans(lens, k))
+
+        rows.append(["waste_model", dataset, len(bm.buckets),
+                     len(bm2.buckets), round(single, 4), round(mid, 4),
+                     round(eq4, 4), round(lloyd, 4)])
+    emit(rows, ["table", "dataset", "n_buckets_paper", "n_buckets_beyond",
+                "E_waste_single", "E_waste_midpoint_paper",
+                "E_waste_beyond(eq4+waste_trigger)",
+                "E_waste_lloyd_optimum"])
+
+
+if __name__ == "__main__":
+    main()

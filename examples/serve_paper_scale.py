@@ -1,0 +1,53 @@
+"""End-to-end serving driver at paper scale (Llama2-13B / 4xA100 cost
+model): BucketServe vs the baselines on a bursty mixed workload.
+
+    PYTHONPATH=src python examples/serve_paper_scale.py [--rps 4] [--n 200]
+
+This is the paper's Fig. 5 experiment as a single runnable script; the
+same scheduler objects also drive the real CPU engine (quickstart.py).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config
+from repro.core.baselines import SIM_MODE, hardware_for, make_scheduler
+from repro.core.batcher import MemoryBudget
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.data.workload import WorkloadSpec, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rps", type=float, default=4.0)
+    ap.add_argument("--n", type=int, default=200)
+    ap.add_argument("--dataset", default="mixed",
+                    choices=["alpaca", "longbench", "mixed"])
+    args = ap.parse_args()
+
+    cfg = get_config("llama2-13b")
+    print(f"model={cfg.name}  dataset={args.dataset}  "
+          f"client_rps={args.rps}  n={args.n}\n")
+    print(f"{'system':12s} {'tok/s':>8s} {'srv_rps':>8s} {'SLO':>6s} "
+          f"{'p50 TTFT':>9s} {'OOM':>4s} {'pad_eff':>8s}")
+    for name in SIM_MODE:
+        spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
+                            n_requests=args.n,
+                            max_model_len=cfg.max_seq_len)
+        reqs = generate(spec)
+        hw, nd, _ = hardware_for(name, A100X4)
+        budget = MemoryBudget(hw.hbm_bytes, nd, cfg.param_count() * 2)
+        sim = Simulator(make_scheduler(name, cfg, budget),
+                        CostModel(cfg, hw), mode=SIM_MODE[name])
+        res = sim.run(reqs)
+        ttfts = sorted(r.ttft() for r in res.finished())
+        p50 = ttfts[len(ttfts) // 2] if ttfts else float("nan")
+        print(f"{name:12s} {res.throughput_tok_s():8.0f} "
+              f"{res.server_rps():8.2f} {res.slo_attainment():6.2f} "
+              f"{p50:8.2f}s {res.oom_events:4d} "
+              f"{res.padding_efficiency():8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""BucketServe core: the paper's contribution as composable modules."""
+from .request import Request, TaskType                      # noqa: F401
+from .bucket import Bucket, BucketManager                   # noqa: F401
+from .batcher import (DynamicBatchController, FormedBatch,  # noqa: F401
+                      MemoryBudget)
+from .scheduler import BucketServeScheduler, SchedulerConfig  # noqa: F401
+from .monitor import GlobalMonitor                          # noqa: F401

@@ -1,0 +1,122 @@
+"""Dynamic batching controller — paper Eqs. (1), (5), (6).
+
+Memory safety:
+    M_safe = 0.9 × M_remain                                   (Eq. 5)
+    N_max  = max{ N : Σ_{i<=N} S_i  <=  M_safe / (2·L·H·D·B) } (Eq. 6)
+
+The 2LHDB factor is ``ModelConfig.kv_bytes_per_token`` (which correctly
+zeroes attention-free layers and window-caps SWA/local-attention layers —
+the TPU adaptation of the paper's A100 memory model, DESIGN.md §4).
+
+Two memory models:
+  * ``"sum"``    — the paper's Eq. (6): footprint ∝ Σ S_i (per-request
+    exact allocation; what vLLM-style paged memory achieves).
+  * ``"padded"`` — footprint ∝ N × S_pad (bucket-upper padding; what a
+    static-shape TPU runtime actually allocates).  Beyond-paper but
+    required for honest TPU memory accounting; used by the real engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.models.config import ModelConfig
+from .bucket import Bucket, BucketManager
+from .request import Request, TaskType
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBudget:
+    hbm_bytes_per_device: int = 16 * 2 ** 30      # v5e
+    n_devices: int = 1                             # devices holding this cache
+    weight_bytes: int = 0                          # model weights (sharded)
+    activation_reserve: float = 0.05               # fraction held back
+    reserve: float = 0.10                          # paper's 10% (Eq. 5)
+
+    def m_safe(self) -> float:
+        total = self.hbm_bytes_per_device * self.n_devices
+        remain = total - self.weight_bytes - self.activation_reserve * total
+        return max(0.0, (1.0 - self.reserve) * remain)   # Eq. (5)
+
+
+@dataclasses.dataclass
+class FormedBatch:
+    requests: List[Request]
+    pad_to: int                                    # padded sequence length
+    bucket: Optional[Bucket] = None
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.prompt_len for r in self.requests)
+
+    @property
+    def padded_tokens(self) -> int:
+        return self.pad_to * len(self.requests)
+
+
+class DynamicBatchController:
+    def __init__(self, cfg: ModelConfig, budget: MemoryBudget,
+                 memory_model: str = "sum", bytes_per_el: int = 2,
+                 max_batch: int = 512, decode_reserve: float = 0.5,
+                 pad_multiple: int = 128):
+        self.cfg = cfg
+        self.budget = budget
+        self.memory_model = memory_model
+        # quantized-KV variant: Eq. (6) admits ~2x the live tokens
+        self.kv_per_tok = max(cfg.cache_bytes_per_token(), 1)
+        self.state_per_req = cfg.state_bytes(bytes_per_el)
+        self.max_batch = max_batch
+        # fraction of the KV budget reserved for in-flight decode caches
+        self.decode_reserve = decode_reserve
+        self.pad_multiple = pad_multiple
+
+    # -------------------------------------------------------------- Eq 6 --
+    def token_budget(self, in_flight_tokens: int = 0) -> float:
+        """M_safe / 2LHDB minus what live decode caches already hold."""
+        cap = self.budget.m_safe() / self.kv_per_tok
+        return max(0.0, cap - in_flight_tokens)
+
+    def n_max(self, mean_len: float, in_flight_tokens: int = 0) -> int:
+        """Scalar N_max used by Algorithm 1's split threshold."""
+        cap = self.token_budget(in_flight_tokens) * (1 - self.decode_reserve)
+        return max(1, min(self.max_batch, int(cap / max(mean_len, 1.0))))
+
+    def _cache_len(self, r: Request) -> int:
+        win = self.cfg.sliding_window or (
+            self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
+        need = r.prompt_len + r.max_new_tokens
+        return min(need, win) if win else need
+
+    def form_batch(self, ordered: List[Request],
+                   in_flight_tokens: int = 0) -> FormedBatch:
+        """Greedy prefix of `ordered` under Eq. (6) (or padded model)."""
+        cap = self.token_budget(in_flight_tokens) * (1 - self.decode_reserve)
+        take, tot, pad = [], 0, 0
+        for r in ordered:
+            if len(take) >= self.max_batch:
+                break
+            clen = self._cache_len(r)
+            if self.memory_model == "sum":
+                new_tot = tot + clen
+                if take and new_tot > cap:
+                    break
+                tot = new_tot
+            else:  # padded
+                new_pad = max(pad, self._round(clen))
+                if take and new_pad * (len(take) + 1) > cap:
+                    break
+                pad = new_pad
+                tot = pad * (len(take) + 1)
+            take.append(r)
+            # SSM/hybrid per-request state counts against the budget too
+            tot += self.state_per_req / self.kv_per_tok
+        pad_to = self._round(max((r.prompt_len for r in take), default=0))
+        return FormedBatch(take, pad_to)
+
+    def _round(self, n: int) -> int:
+        m = self.pad_multiple
+        return -(-n // m) * m if n else 0

@@ -1,0 +1,174 @@
+"""Real JAX serving engine — BucketServe policies driving actual models.
+
+This is the execution layer the simulator's cost model stands in for at
+paper scale: at tiny-model scale (CPU) it runs the *same* scheduler
+objects against real jitted prefill/decode computations, token for token.
+
+TPU-native continuous batching (DESIGN.md §3): the decode pool is a
+FIXED-CAPACITY slot tensor — cache pytree with a leading slot axis, an
+alive mask, and per-slot next-token ids.  Each iteration decodes all
+slots (dead slots compute garbage that is masked); completed requests
+free their slot and new prefilled requests are scattered in.  Static
+shapes throughout: one compiled executable per bucket pad-shape for
+prefill (bucketing bounds the executable count — the recompilation
+argument for bucketing on TPU), one for decode.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from .request import Request
+from .scheduler import BucketServeScheduler
+
+
+def _insert_slot(pool_cache, batch_cache, slot: int, b: int):
+    """Copy sequence `b` of a prefill cache into pool slot `slot`."""
+    pos = pool_cache["pos"].at[slot].set(batch_cache["pos"][b])
+    groups = jax.tree.map(
+        lambda pl, bc: pl.at[:, slot].set(bc[:, b]),
+        pool_cache["groups"], batch_cache["groups"])
+    return {"pos": pos, "groups": groups}
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, scheduler, *,
+                 max_slots: int = 8, cache_len: Optional[int] = None,
+                 moe_impl: str = "local", time_scale: float = 1.0):
+        self.cfg = cfg
+        self.params = params
+        self.sched = scheduler
+        self.max_slots = max_slots
+        self.cache_len = cache_len or cfg.max_seq_len
+        self.moe_impl = moe_impl
+        self.time_scale = time_scale       # virtual seconds per wall second
+
+        self.pool_cache = tfm.init_cache(cfg, max_slots, self.cache_len)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.next_tok = jnp.zeros((max_slots,), jnp.int32)
+        self.outputs: Dict[int, List[int]] = {}
+        self._prefill_fns: Dict[tuple, callable] = {}
+        self._decode_fn = jax.jit(
+            lambda p, t, c: tfm.decode_step(cfg, p, t, c,
+                                            moe_impl=moe_impl))
+        self.n_prefill_shapes = 0
+
+    # ------------------------------------------------------------- jits --
+    def _prefill_fn(self, pad_to: int, bsz: int):
+        key = (pad_to, bsz)
+        if key not in self._prefill_fns:
+            cfg, moe_impl = self.cfg, self.moe_impl
+
+            def fn(p, tokens, lengths):
+                return tfm.prefill(cfg, p, tokens=tokens, lengths=lengths,
+                                   cache_len=self.cache_len,
+                                   moe_impl=moe_impl)
+            self._prefill_fns[key] = jax.jit(fn)
+            self.n_prefill_shapes += 1
+        return self._prefill_fns[key]
+
+    # -------------------------------------------------------------- api --
+    def submit(self, requests: List[Request]) -> None:
+        for r in requests:
+            if r.tokens is None:
+                rng = np.random.default_rng(r.rid)
+                r.tokens = rng.integers(
+                    0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+            self.outputs[r.rid] = []
+        self._pending = sorted(requests, key=lambda r: r.arrival)
+        self._t0 = time.perf_counter()
+
+    def _now(self) -> float:
+        return (time.perf_counter() - self._t0) * self.time_scale
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def run(self, max_wall_s: float = 600.0) -> List[Request]:
+        done: List[Request] = []
+        n_total = len(self._pending)
+        arrived = 0
+        while len(done) < n_total:
+            if time.perf_counter() - self._t0 > max_wall_s:
+                break
+            now = self._now()
+            while arrived < n_total and self._pending[arrived].arrival <= now:
+                self.sched.on_arrival(self._pending[arrived], now)
+                arrived += 1
+
+            free = self._free_slots()
+            progressed = False
+            if self.sched.queued() and free:
+                batch = self.sched.next_prefill_batch(now)
+                if batch is not None:
+                    reqs = batch.requests
+                    if len(reqs) > len(free):   # slot-capacity clamp
+                        for r in reqs[len(free):]:
+                            self.sched.on_arrival(r, now)
+                        reqs = reqs[:len(free)]
+                    self._do_prefill(reqs, max(batch.pad_to, 8), done)
+                    progressed = True
+            if any(r is not None for r in self.slot_req):
+                self._do_decode_iter(done)
+                progressed = True
+            if not progressed:
+                if arrived < n_total:
+                    time.sleep(min(
+                        0.001,
+                        max(self._pending[arrived].arrival - now, 0)
+                        / self.time_scale))
+                else:
+                    break
+        return done
+
+    # ------------------------------------------------------- internals --
+    def _do_prefill(self, reqs: List[Request], pad_to: int, done):
+        now = self._now()
+        B = len(reqs)
+        toks = np.zeros((B, pad_to), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            L = min(r.prompt_len, pad_to)
+            toks[i, :L] = r.tokens[:L]
+            lens[i] = L
+            r.prefill_start = now
+        fn = self._prefill_fn(pad_to, B)
+        logits, cache = fn(self.params, jnp.asarray(toks), jnp.asarray(lens))
+        first = jnp.argmax(logits, -1).astype(jnp.int32)
+        now = self._now()
+        for i, r in enumerate(reqs):
+            r.first_token = now
+            r.generated = 1
+            self.outputs[r.rid].append(int(first[i]))
+            if r.max_new_tokens <= 1 or not self.cfg.has_decode:
+                r.finished = now
+                done.append(r)
+                continue
+            slot = self._free_slots()[0]
+            self.pool_cache = _insert_slot(self.pool_cache, cache, slot, i)
+            self.next_tok = self.next_tok.at[slot].set(first[i])
+            self.slot_req[slot] = r
+            self.sched.admit_decode(r)
+
+    def _do_decode_iter(self, done):
+        logits, self.pool_cache = self._decode_fn(
+            self.params, self.next_tok, self.pool_cache)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.next_tok = nxt
+        now = self._now()
+        for slot, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            r.generated += 1
+            self.outputs[r.rid].append(int(nxt[slot]))
+            if r.generated >= r.max_new_tokens:
+                r.finished = now
+                done.append(r)
+                self.slot_req[slot] = None
+                self.sched.release_decode(r)

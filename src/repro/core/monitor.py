@@ -1,0 +1,75 @@
+"""Global Monitor — system-wide metric aggregation (paper §III).
+
+Feeds the Dynamic Batching Controller (memory pressure) and the P/D
+Scheduler (queue occupancy, waiting times).  Pure bookkeeping: works for
+both the discrete-event simulator and the real engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, Dict, List
+
+
+@dataclasses.dataclass
+class Snapshot:
+    t: float
+    queue_len: int
+    decode_pool: int
+    in_flight_tokens: int
+    arrival_rate: float
+    mean_seq_len: float
+    n_buckets: int
+    kv_util: float
+
+
+class GlobalMonitor:
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self.arrivals: Deque[float] = collections.deque()
+        self.seq_lens: Deque[int] = collections.deque(maxlen=512)
+        self.batch_lat: Deque[float] = collections.deque(maxlen=512)
+        self.history: List[Snapshot] = []
+        self.in_flight_tokens = 0
+        self.decode_pool = 0
+        self.queue_len = 0
+        self.n_buckets = 1
+        self.kv_budget_tokens = 1.0
+
+    # ------------------------------------------------------------ events --
+    def on_arrival(self, t: float, seq_len: int) -> None:
+        self.arrivals.append(t)
+        while self.arrivals and self.arrivals[0] < t - self.window_s:
+            self.arrivals.popleft()
+        self.seq_lens.append(seq_len)
+        self.queue_len += 1
+
+    def on_batch(self, latency_s: float) -> None:
+        self.batch_lat.append(latency_s)
+
+    # ------------------------------------------------------------- stats --
+    def arrival_rate(self) -> float:
+        if len(self.arrivals) < 2:
+            return 0.0
+        span = max(self.arrivals[-1] - self.arrivals[0], 1e-6)
+        return (len(self.arrivals) - 1) / span
+
+    def mean_seq_len(self) -> float:
+        if not self.seq_lens:
+            return 1.0
+        return sum(self.seq_lens) / len(self.seq_lens)
+
+    def mean_batch_latency(self) -> float:
+        if not self.batch_lat:
+            return 0.0
+        return sum(self.batch_lat) / len(self.batch_lat)
+
+    def kv_util(self) -> float:
+        return min(1.0, self.in_flight_tokens / max(self.kv_budget_tokens, 1))
+
+    def snapshot(self, t: float) -> Snapshot:
+        s = Snapshot(t, self.queue_len, self.decode_pool,
+                     self.in_flight_tokens, self.arrival_rate(),
+                     self.mean_seq_len(), self.n_buckets, self.kv_util())
+        self.history.append(s)
+        return s

@@ -1,0 +1,53 @@
+"""Request model for the serving system."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class TaskType(enum.Enum):
+    ONLINE = "online"     # latency-sensitive, SLO-bound
+    OFFLINE = "offline"   # throughput-oriented
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    rid: int
+    prompt_len: int                      # S in the paper
+    max_new_tokens: int
+    arrival: float                       # seconds
+    task_type: TaskType = TaskType.ONLINE
+    slo_ttft: float = 2.0                # time-to-first-token SLO (s)
+    slo_tpot: float = 0.2                # time-per-output-token SLO (s)
+    tokens: Optional[np.ndarray] = None  # actual token ids (real engine)
+
+    # --- lifecycle (filled by scheduler/engine) ---
+    prefill_start: float = -1.0
+    first_token: float = -1.0
+    finished: float = -1.0
+    generated: int = 0
+    dropped: bool = False
+
+    @property
+    def S(self) -> int:
+        return self.prompt_len
+
+    def ttft(self) -> float:
+        return self.first_token - self.arrival if self.first_token >= 0 else float("inf")
+
+    def tpot(self) -> float:
+        if self.finished < 0 or self.generated <= 1:
+            return 0.0
+        return (self.finished - self.first_token) / max(self.generated - 1, 1)
+
+    def e2e(self) -> float:
+        return self.finished - self.arrival if self.finished >= 0 else float("inf")
+
+    def slo_met(self) -> bool:
+        """SLO attainment: both TTFT and per-token latency within bound."""
+        if self.finished < 0 or self.dropped:
+            return False
+        return self.ttft() <= self.slo_ttft and self.tpot() <= self.slo_tpot

@@ -1,0 +1,129 @@
+"""P/D scheduler: bucket-aware prefill batching + continuous-batching
+decode, with prefill->decode KV transfer (paper §III "P/D Scheduler").
+
+The scheduler is pure policy — no clocks, no devices.  Both the
+discrete-event simulator (core/simulator.py) and the real JAX engine
+(core/engine.py) drive it:
+
+    on_arrival(req, now)           assign to bucket (Algorithm 1 insert)
+    next_prefill_batch(now, ...)   adjust buckets, pick bucket, form batch
+    (decode admission is slot-based continuous batching in the consumer)
+
+Bucket choice: ONLINE requests first (bucket holding the earliest-arrived
+online request — paper: "online tasks prioritize buckets based on
+earliest request arrival time"); otherwise offline buckets ordered by the
+configured within-bucket policy (SJF for RPS, LJF for token throughput).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.models.config import ModelConfig
+from .batcher import DynamicBatchController, FormedBatch, MemoryBudget
+from .bucket import Bucket, BucketManager
+from .monitor import GlobalMonitor
+from .request import Request, TaskType
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    offline_policy: str = "sjf"          # sjf | ljf  (paper §II-B)
+    theta: float = 0.5                   # Algorithm 1 split threshold
+    assignment: str = "linear"           # linear (paper) | bisect (beyond)
+    refine: str = "midpoint"             # midpoint (paper) | eq4 (beyond)
+    trigger: str = "majority"            # majority (paper) | waste (beyond)
+    memory_model: str = "sum"            # sum (paper Eq. 6) | padded (TPU)
+    max_batch: int = 512
+    decode_reserve: float = 0.5
+    kv_transfer_bw: float = 50e9         # ICI per link (TPU adaptation)
+
+
+class BucketServeScheduler:
+    """The paper's middleware: Bucketing Manager + Batching Controller."""
+
+    name = "bucketserve"
+
+    def __init__(self, cfg: ModelConfig, budget: MemoryBudget,
+                 sched: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self.sched = sched
+        self.buckets = BucketManager(
+            l_max=cfg.max_seq_len, theta=sched.theta,
+            assignment=sched.assignment, refine=sched.refine,
+            trigger=sched.trigger)
+        self.batcher = DynamicBatchController(
+            cfg, budget, memory_model=sched.memory_model,
+            max_batch=sched.max_batch, decode_reserve=sched.decode_reserve)
+        self.monitor = GlobalMonitor()
+        self.monitor.kv_budget_tokens = self.batcher.token_budget()
+
+    # ------------------------------------------------------------ events --
+    def on_arrival(self, req: Request, now: float) -> None:
+        self.buckets.add(req)
+        self.monitor.on_arrival(now, req.prompt_len)
+
+    def queued(self) -> int:
+        return self.buckets.total()
+
+    # -------------------------------------------------------- scheduling --
+    def _n_max(self) -> int:
+        return self.batcher.n_max(self.monitor.mean_seq_len(),
+                                  self.monitor.in_flight_tokens)
+
+    def _pick_bucket(self) -> Optional[Bucket]:
+        nonempty = self.buckets.nonempty()
+        if not nonempty:
+            return None
+        online = [b for b in nonempty
+                  if any(r.task_type == TaskType.ONLINE for r in b.requests)]
+        if online:
+            return min(online, key=lambda b: min(
+                r.arrival for r in b.requests
+                if r.task_type == TaskType.ONLINE))
+        if self.sched.offline_policy == "sjf":
+            return min(nonempty, key=lambda b: b.low)
+        return max(nonempty, key=lambda b: b.up)
+
+    def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
+        """One scheduling tick: Algorithm 1 adjust + batch formation."""
+        n_max = self._n_max()
+        self.buckets.adjust(n_max)
+        self.monitor.n_buckets = len(self.buckets.buckets)
+        b = self._pick_bucket()
+        if b is None:
+            return None
+        has_online = any(r.task_type == TaskType.ONLINE for r in b.requests)
+        policy = "fcfs" if has_online else self.sched.offline_policy
+        ordered = self.buckets.order_bucket(b, policy)
+        batch = self.batcher.form_batch(ordered,
+                                        self.monitor.in_flight_tokens)
+        if not batch.requests:
+            return None
+        batch.bucket = b
+        self.buckets.pop(batch.requests)
+        self.monitor.queue_len -= len(batch.requests)
+        return batch
+
+    # -------------------------------------------------- decode admission --
+    def admit_decode(self, req: Request) -> None:
+        self.monitor.decode_pool += 1
+        self.monitor.in_flight_tokens += self._live_tokens(req)
+
+    def release_decode(self, req: Request) -> None:
+        self.monitor.decode_pool -= 1
+        self.monitor.in_flight_tokens -= self._live_tokens(req)
+
+    def _live_tokens(self, req: Request) -> int:
+        tokens = req.prompt_len + req.max_new_tokens
+        win = self.cfg.sliding_window or (
+            self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
+        return min(tokens, win) if win else tokens
+
+    # ------------------------------------------------------- KV transfer --
+    def kv_transfer_seconds(self, batch: FormedBatch) -> float:
+        """Prefill->decode cache move over ICI (TPU adaptation of the
+        paper's NVLink transfer)."""
+        bytes_ = sum(r.prompt_len for r in batch.requests) * \
+            self.batcher.kv_per_tok
+        return bytes_ / self.sched.kv_transfer_bw

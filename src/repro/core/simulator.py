@@ -1,0 +1,447 @@
+"""Discrete-event simulator: paper-scale end-to-end serving experiments.
+
+The container is CPU-only, so the paper's 4×A100 experiments (Fig. 5/6)
+are reproduced on an analytic cost model; the same scheduler objects also
+drive the *real* JAX engine (core/engine.py) at tiny-model scale, which
+is how the cost model's scheduling behaviour is validated.
+
+Cost model:
+  prefill (compute-bound):  t = FLOPs(padded tokens) / (chips·peak·MFU)
+  decode  (memory-bound) :  t = max(weight+KV bytes / (chips·BW·eff),
+                                     FLOPs / (chips·peak·MFU))
+  KV transfer prefill->decode over NVLink (A100) / ICI (TPU).
+
+OOM semantics: schedulers admitting more live KV tokens than the device
+budget trigger an OOM event — the offending batch is evicted and
+re-queued after a restart penalty (models vLLM preemption/recompute).
+BucketServe's Eq. (5)/(6) memory safety avoids these by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+from repro.models.config import ModelConfig
+from .batcher import FormedBatch, MemoryBudget
+from .request import Request, TaskType
+
+
+# ------------------------------------------------------------- hardware ---
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float            # per chip, bf16
+    hbm_bw: float                # per chip
+    link_bw: float               # inter-chip (KV transfer)
+    hbm_bytes: int               # per chip
+    prefill_chips: int = 2
+    decode_chips: int = 2
+    mfu: float = 0.55            # achievable fraction of peak in prefill
+    bw_eff: float = 0.80         # achievable fraction of HBM bandwidth
+
+
+A100X4 = HardwareSpec("a100x4", 312e12, 1.555e12, 300e9, 40 * 2 ** 30,
+                      prefill_chips=2, decode_chips=2)
+V5E_POD = HardwareSpec("v5e", 197e12, 819e9, 50e9, 16 * 2 ** 30,
+                       prefill_chips=128, decode_chips=128)
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec,
+                 bytes_per_el: int = 2):
+        self.cfg = cfg
+        self.hw = hw
+        self.b = bytes_per_el
+        self.p_active = cfg.active_param_count()
+        # honors the int8-KV serving variant (halved cache traffic/budget)
+        self.kv_per_tok = max(cfg.cache_bytes_per_token(), 1)
+        self.weight_bytes = cfg.param_count() * bytes_per_el
+
+    def _attn_flops(self, s: int) -> float:
+        """Quadratic attention FLOPs per sequence of length s (score+value)."""
+        win = self.cfg.sliding_window or (
+            self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
+        if self.cfg.attention_free:
+            return 2.0 * 2 * self.cfg.n_layers * self.cfg.d_model * s * 64
+        eff = min(s, win) if win else s
+        n_attn = self.cfg.n_layers
+        return 2.0 * 2 * n_attn * self.cfg.n_heads * self.cfg.d_head * s * eff
+
+    def prefill_seconds(self, n: int, pad_to: int) -> float:
+        tokens = n * pad_to                      # padded compute (TPU shapes)
+        flops = 2.0 * self.p_active * tokens + n * self._attn_flops(pad_to)
+        chips = self.hw.prefill_chips
+        return flops / (chips * self.hw.peak_flops * self.hw.mfu)
+
+    def decode_iter_seconds(self, context_tokens: int, pool: int) -> float:
+        """One iteration over the decode pool (one token each).
+        `context_tokens`: KV tokens actually READ this iteration — exact
+        live tokens for continuous/paged systems, padded-batch tokens for
+        batch-granularity systems (the paper's Fig. 3b waste)."""
+        if pool == 0:
+            return 0.0
+        chips = self.hw.decode_chips
+        mem = (self.weight_bytes / chips +
+               context_tokens * self.kv_per_tok / chips) / \
+            (self.hw.hbm_bw * self.hw.bw_eff)
+        comp = 2.0 * self.p_active * pool / (chips * self.hw.peak_flops
+                                             * self.hw.mfu)
+        return max(mem, comp)
+
+    def transfer_seconds(self, prompt_tokens: int) -> float:
+        return prompt_tokens * self.kv_per_tok / self.hw.link_bw
+
+    def kv_budget_tokens(self, chips: int, reserve: float = 0.10,
+                         act_reserve: float = 0.05) -> float:
+        total = self.hw.hbm_bytes * chips
+        remain = total - self.weight_bytes - act_reserve * total
+        return max(0.0, (1 - reserve) * remain) / self.kv_per_tok
+
+
+# ------------------------------------------------------------- results ----
+@dataclasses.dataclass
+class SimResult:
+    requests: List[Request]
+    makespan: float
+    busy_prefill: float
+    busy_decode: float
+    useful_flops: float
+    padded_flops: float
+    oom_events: int
+    bucketing_overhead_s: float
+    prefill_time_total: float = 0.0
+    decode_time_total: float = 0.0
+    transfer_time_total: float = 0.0
+
+    def finished(self):
+        return [r for r in self.requests if r.finished >= 0]
+
+    def throughput_tok_s(self) -> float:
+        toks = sum(r.generated + r.prompt_len for r in self.finished())
+        return toks / max(self.makespan, 1e-9)
+
+    def output_tok_s(self) -> float:
+        return sum(r.generated for r in self.finished()) / max(self.makespan, 1e-9)
+
+    def server_rps(self) -> float:
+        return len(self.finished()) / max(self.makespan, 1e-9)
+
+    def slo_attainment(self) -> float:
+        if not self.requests:
+            return 0.0
+        return sum(r.slo_met() for r in self.requests) / len(self.requests)
+
+    def utilization(self, hw: HardwareSpec) -> float:
+        """Model-FLOPs utilization over the busy window (the simulator's
+        analogue of the paper's GPU-utilization metric)."""
+        chips = hw.prefill_chips + hw.decode_chips
+        return self.useful_flops / max(
+            chips * hw.peak_flops * self.makespan, 1e-9)
+
+    def padding_efficiency(self) -> float:
+        return self.useful_flops / max(self.padded_flops, 1e-9)
+
+    def busy_utilization(self, n_executors: int = 2) -> float:
+        """Fraction of executor-time busy — the closest analogue of the
+        paper's 'average GPU utilization' (Fig. 5b)."""
+        return min(1.0, (self.busy_prefill + self.busy_decode)
+                   / max(n_executors * self.makespan, 1e-9))
+
+
+# ------------------------------------------------------------ simulator ---
+class Simulator:
+    """P/D serving simulation in one of three execution modes:
+
+    * ``disagg``  — separate prefill/decode executors + KV transfer
+      (BucketServe, DistServe).
+    * ``coupled`` — ONE executor; each iteration fuses the new prefill
+      batch (if any) with one decode step over the live pool — Orca-style
+      iteration-level scheduling.  Prefill work inflates every concurrent
+      request's TPOT: the phase interference DistServe/BucketServe remove.
+    * ``static``  — one executor; a batch runs prefill + ALL decode steps
+      to completion before the next batch starts (naive static batching).
+    """
+
+    def __init__(self, scheduler, cost: CostModel, *, mode: str = "disagg",
+                 decode_slot_cap: int = 256, restart_penalty: float = 0.5,
+                 tick: float = 0.005):
+        assert mode in ("disagg", "coupled", "static")
+        self.sched = scheduler
+        self.cost = cost
+        self.mode = mode
+        self.decode_slot_cap = decode_slot_cap
+        self.restart_penalty = restart_penalty
+        self.tick = tick
+
+    # ------------------------------------------------------------------
+    def run(self, requests: List[Request],
+            time_limit: float = 3600.0) -> SimResult:
+        cost, sched = self.cost, self.sched
+        arrivals = sorted(requests, key=lambda r: r.arrival)
+        self._n = len(requests)
+        st = _SimState(kv_budget=cost.kv_budget_tokens(
+            cost.hw.decode_chips if self.mode == "disagg"
+            else cost.hw.decode_chips + cost.hw.prefill_chips))
+        if self.mode == "disagg":
+            self._run_disagg(arrivals, st, time_limit)
+        else:
+            self._run_coupled(arrivals, st, time_limit)
+        overhead = getattr(getattr(sched, "buckets", None), "overhead_s", 0.0)
+        return SimResult(requests=requests, makespan=st.now,
+                         busy_prefill=st.busy_p, busy_decode=st.busy_d,
+                         useful_flops=st.useful, padded_flops=st.padded,
+                         oom_events=st.oom, bucketing_overhead_s=overhead,
+                         prefill_time_total=st.t_pre,
+                         decode_time_total=st.t_dec,
+                         transfer_time_total=st.t_xfer)
+
+    # ------------------------------------------------------------ util --
+    def _admit_arrivals(self, arrivals, st):
+        while st.ai < len(arrivals) and arrivals[st.ai].arrival <= st.now:
+            self.sched.on_arrival(arrivals[st.ai], arrivals[st.ai].arrival)
+            st.ai += 1
+
+    @staticmethod
+    def _live_tokens(pool):
+        return sum(r.prompt_len + r.generated for r in pool)
+
+    def _finish_iteration(self, pool, st, end_time):
+        """Advance every pooled request one token; retire finished ones."""
+        cost = self.cost
+        st.useful += 2.0 * cost.p_active * len(pool)
+        st.padded += 2.0 * cost.p_active * len(pool)
+        for r in list(pool):
+            r.generated += 1
+            if r.generated >= r.max_new_tokens:
+                r.finished = end_time
+                st.done += 1
+                pool.remove(r)
+                self.sched.release_decode(r)
+
+    def _handle_oom(self, batch, st):
+        """Evict + re-queue; oversized singletons are dropped (unservable);
+        the scheduler's retry backoff (notify_oom) shrinks its next cap."""
+        if hasattr(self.sched, "notify_oom"):
+            self.sched.notify_oom()
+        for r in batch.requests:
+            if r.prompt_len + r.max_new_tokens > st.kv_budget:
+                r.dropped = True
+                r.finished = -1.0
+                st.done += 1
+                continue
+            r.arrival = st.now + self.restart_penalty
+            self.sched.on_arrival(r, r.arrival)
+
+    def _account_prefill(self, batch, dt, st):
+        cost = self.cost
+        st.busy_p += dt
+        st.t_pre += dt * batch.size
+        st.useful += 2.0 * cost.p_active * batch.total_tokens
+        st.padded += 2.0 * cost.p_active * batch.padded_tokens
+
+    # --------------------------------------------------------- disagg --
+    def _run_disagg(self, arrivals, st, time_limit):
+        cost, sched = self.cost, self.sched
+        pool: List[Request] = []
+        pending_join: List[list] = []     # [ready_time, req]
+        prefill_free = decode_free = 0.0
+
+        while st.done < self._n and st.now < time_limit:
+            self._admit_arrivals(arrivals, st)
+            for item in list(pending_join):
+                if item[0] <= st.now and len(pool) < self.decode_slot_cap:
+                    pool.append(item[1])
+                    pending_join.remove(item)
+
+            progressed = False
+            if prefill_free <= st.now and sched.queued():
+                batch = sched.next_prefill_batch(st.now)
+                if batch is not None:
+                    batch_tokens = sum(r.prompt_len + r.max_new_tokens
+                                       for r in batch.requests)
+                    pending_tokens = sum(
+                        it[1].prompt_len + it[1].max_new_tokens
+                        for it in pending_join)
+                    if (self._live_tokens(pool) + pending_tokens
+                            + batch_tokens > st.kv_budget):
+                        st.oom += 1
+                        self._handle_oom(batch, st)
+                        prefill_free = st.now + self.restart_penalty
+                    else:
+                        dt = cost.prefill_seconds(batch.size, batch.pad_to)
+                        xfer = cost.transfer_seconds(batch.total_tokens)
+                        for r in batch.requests:
+                            r.prefill_start = st.now
+                            r.first_token = st.now + dt
+                            r.generated = 1
+                            if r.generated >= r.max_new_tokens:
+                                r.finished = st.now + dt
+                                st.done += 1
+                            else:
+                                # KV allocated AT PREFILL: account it now so
+                                # the batcher's Eq. (6) sees in-transfer
+                                # caches too (prevents admission overshoot).
+                                sched.admit_decode(r)
+                                pending_join.append([st.now + dt + xfer, r])
+                        prefill_free = st.now + dt
+                        self._account_prefill(batch, dt, st)
+                        st.t_xfer += xfer * batch.size
+                    progressed = True
+            if decode_free <= st.now and pool:
+                dt = cost.decode_iter_seconds(self._live_tokens(pool),
+                                              len(pool))
+                decode_free = st.now + dt
+                st.busy_d += dt
+                st.t_dec += dt * len(pool)
+                self._finish_iteration(pool, st, st.now + dt)
+                progressed = True
+
+            if not progressed:
+                cands = [c for c in
+                         [prefill_free if sched.queued() else None,
+                          decode_free if pool else None,
+                          arrivals[st.ai].arrival if st.ai < len(arrivals)
+                          else None]
+                         + [it[0] for it in pending_join]
+                         if c is not None and c > st.now]
+                st.now = min(cands) if cands else st.now + self.tick
+
+    # --------------------------------------------------------- coupled --
+    def _run_coupled(self, arrivals, st, time_limit):
+        """Orca/UELLM-style single-executor engines.
+
+        * ``coupled`` (Orca): iteration-level — each iteration fuses the
+          new prefill batch with one decode step over the live pool; exact
+          (selective-batching) KV reads, but prefill inflates every
+          concurrent TPOT (phase interference).
+        * ``static`` (naive static batching, UELLM batch-granularity):
+          a formed batch runs prefill + decode TO COMPLETION.  Every
+          iteration reads the PADDED batch context (all slots padded to
+          the batch max prompt) and the executor is held until the
+          longest member finishes (convoy effect).  This is the mixed-
+          batch decode waste of paper Fig. 3b.
+        """
+        cost, sched = self.cost, self.sched
+        pool: List[Request] = []
+        static = self.mode == "static"
+
+        while st.done < self._n and st.now < time_limit:
+            self._admit_arrivals(arrivals, st)
+            batch = None
+            can_admit = ((not static) or not pool) and \
+                st.now >= st.oom_cooldown_until
+            if sched.queued() and can_admit and \
+                    len(pool) < self.decode_slot_cap:
+                batch = sched.next_prefill_batch(st.now)
+                if batch is not None:
+                    batch_tokens = sum(r.prompt_len + r.max_new_tokens
+                                       for r in batch.requests)
+                    if self._live_tokens(pool) + batch_tokens > st.kv_budget:
+                        st.oom += 1
+                        self._handle_oom(batch, st)
+                        st.oom_cooldown_until = st.now + self.restart_penalty
+                        batch = None
+
+            if static:
+                if batch is not None:
+                    self._run_batch_to_completion(batch, st)
+                else:
+                    cands = [c for c in
+                             [arrivals[st.ai].arrival
+                              if st.ai < len(arrivals) else None]
+                             if c is not None and c > st.now]
+                    if sched.queued():
+                        cands.append(st.now + self.tick)
+                    st.now = min(cands) if cands else st.now + self.tick
+                continue
+
+            if batch is None and not pool:
+                cands = [c for c in
+                         [arrivals[st.ai].arrival if st.ai < len(arrivals)
+                          else None]
+                         if c is not None and c > st.now]
+                st.now = min(cands) if cands else st.now + self.tick
+                continue
+
+            dt = 0.0
+            if batch is not None:
+                dt += cost.prefill_seconds(batch.size, batch.pad_to)
+            if pool:
+                dt += cost.decode_iter_seconds(self._live_tokens(pool),
+                                               len(pool))
+            end = st.now + dt
+            if batch is not None:
+                for r in batch.requests:
+                    r.prefill_start = st.now
+                    r.first_token = end          # interference: full iter
+                    r.generated = 1
+                self._account_prefill(
+                    batch, cost.prefill_seconds(batch.size, batch.pad_to), st)
+            if pool:
+                ddt = cost.decode_iter_seconds(self._live_tokens(pool),
+                                               len(pool))
+                st.busy_d += ddt
+                st.t_dec += ddt * len(pool)
+                self._finish_iteration(pool, st, end)
+            if batch is not None:
+                for r in batch.requests:
+                    if r.generated >= r.max_new_tokens:
+                        r.finished = end
+                        st.done += 1
+                    else:
+                        pool.append(r)
+                        sched.admit_decode(r)
+            st.now = end
+
+    def _run_batch_to_completion(self, batch, st):
+        """Static/batch-granularity execution with padded decode reads."""
+        cost, sched = self.cost, self.sched
+        n = batch.size
+        pad_prompt = batch.pad_to
+        dt = cost.prefill_seconds(n, pad_prompt)
+        self._account_prefill(batch, dt, st)
+        for r in batch.requests:
+            r.prefill_start = st.now
+            r.first_token = st.now + dt
+            r.generated = 1
+            sched.admit_decode(r)
+        t = st.now + dt
+        iters = max(r.max_new_tokens for r in batch.requests) - 1
+        for i in range(1, iters + 1):
+            context = n * (pad_prompt + i)       # PADDED batch KV read
+            ddt = cost.decode_iter_seconds(context, n)
+            t += ddt
+            st.busy_d += ddt
+            st.t_dec += ddt * n
+            st.useful += 2.0 * cost.p_active * sum(
+                1 for r in batch.requests if r.generated < r.max_new_tokens)
+            st.padded += 2.0 * cost.p_active * n
+            for r in batch.requests:
+                if r.generated < r.max_new_tokens:
+                    r.generated += 1
+                    if r.generated >= r.max_new_tokens:
+                        r.finished = t
+        for r in batch.requests:
+            if r.finished < 0:
+                r.finished = t
+            st.done += 1
+            sched.release_decode(r)
+        st.now = t
+
+
+@dataclasses.dataclass
+class _SimState:
+    kv_budget: float
+    now: float = 0.0
+    ai: int = 0
+    done: int = 0
+    busy_p: float = 0.0
+    busy_d: float = 0.0
+    useful: float = 0.0
+    padded: float = 0.0
+    oom: int = 0
+    t_pre: float = 0.0
+    t_dec: float = 0.0
+    t_xfer: float = 0.0
+    oom_cooldown_until: float = 0.0

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every Pallas kernel (shape-for-shape equivalent)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_ref
+from repro.models import rwkv as rwkv_ref
+
+
+def flash_prefill_ref(q, k, v, lengths=None, *, causal=True, window=0):
+    """Oracle for kernels.flash_prefill (exact softmax attention)."""
+    return attn_ref.full_attention(q, k, v, causal=causal, lengths=lengths,
+                                   window=window)
+
+
+def flash_decode_ref(q, k_cache, v_cache, pos, *, ring=False):
+    """Oracle for kernels.decode_attn.flash_decode."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    out = attn_ref.decode_attention(
+        q, k_cache, v_cache, pos, window=k_cache.shape[1] if ring else 0)
+    return out[:, 0] if squeeze else out
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Oracle for kernels.wkv6 (lax.scan over time)."""
+    return rwkv_ref.wkv_scan(r, k, v, w, u, s0)

@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: RWKV6 WKV recurrence, time-blocked.
+
+The WKV scan is inherently sequential in time (data-dependent decay), so
+the TPU win is not parallelism-over-time but *state residency*: the
+(hs x hs) per-head state matrix stays in VMEM scratch across the whole
+sequence while r/k/v/w stream through in time blocks (one HBM read each,
+no state round-trips — a lax.scan materializes the carry through HBM
+between steps).  Inside a block we run a fori_loop of rank-1 updates on
+the VMEM-resident state.
+
+A chunked matmul formulation (process blk_t steps as one MXU contraction
+using cumulative-decay ratios) is the classic GPU approach; its decay
+ratios ``exp(cum[t]-cum[s])`` overflow f32 for strongly-decaying
+channels, so we keep the numerically exact sequential-in-block form and
+note the chunked variant as future work (EXPERIMENTS.md §Perf).
+
+Grid: (B, H, n_tblocks) — time innermost (sequential).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
+            state_ref, *, blk_t: int, n_t: int):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                      # (hs,)
+
+    def step(t, _):
+        rt = r_ref[0, 0, t].astype(jnp.float32)           # (hs,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        s = state_ref[...]                                # (hs, hs) [k, v]
+        kv = kt[:, None] * vt[None, :]
+        y = jnp.einsum("k,kv->v", rt, s + u[:, None] * kv)
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        state_ref[...] = wt[:, None] * s + kv
+        return 0
+
+    jax.lax.fori_loop(0, blk_t, step, 0)
+
+    @pl.when(ti == n_t - 1)
+    def _fin():
+        sT_ref[0, 0] = state_ref[...].astype(sT_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, s0, *, blk_t: int = 64, interpret: bool = True):
+    """r,k,v,w: (B,T,H,hs); u: (H,hs); s0: (B,H,hs,hs).
+
+    Returns (y (B,T,H,hs) f32, sT (B,H,hs,hs) f32).  Padding: callers mask
+    w=1, k=0 on padded steps (identity update) — see models/rwkv.py.
+    """
+    B, T, H, hs = r.shape
+    blk_t = min(blk_t, T)
+    pad_t = (-T) % blk_t
+    rt, kt, vt, wt = (jnp.moveaxis(x, (1, 2), (2, 1)) for x in (r, k, v, w))
+    if pad_t:
+        # identity updates on padding: w=1, k=0 -> state untouched
+        rt = jnp.pad(rt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, pad_t), (0, 0)),
+                     constant_values=1.0)
+    n_t = rt.shape[2] // blk_t
+
+    kern = functools.partial(_kernel, blk_t=blk_t, n_t=n_t)
+    y, sT = pl.pallas_call(
+        kern,
+        grid=(B, H, n_t),
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_t, hs), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, blk_t, hs), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, blk_t, hs), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, blk_t, hs), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, hs), lambda b, h, ti: (h, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda b, h, ti: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk_t, hs), lambda b, h, ti: (b, h, ti, 0)),
+            pl.BlockSpec((1, 1, hs, hs), lambda b, h, ti: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, n_t * blk_t, hs), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hs, hs), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(rt, kt, vt, wt, u, s0)
+    y = y[:, :, :T] if pad_t else y
+    return jnp.moveaxis(y, (1, 2), (2, 1)), sT

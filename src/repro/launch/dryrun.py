@@ -1,0 +1,221 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) combination with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and record roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b \
+        --shape decode_32k [--multi-pod] [--all] [--out results/dryrun.json]
+
+Writes one JSON record per combination into --out (appending/merging), so
+the full 40x2 sweep can run incrementally and benchmarks/roofline.py can
+read the table without recompiling.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax import (device count locks on first init).
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import hlo_analysis
+from repro.launch.input_specs import (SHAPES, applicable, input_specs,
+                                      model_flops, params_shapes)
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import attention as attn_mod
+from repro.models import transformer as tfm
+from repro.sharding import partition
+from repro.train import optimizer as opt_mod
+from repro.train import train_loop
+
+DTYPE = jnp.bfloat16
+
+
+def _cfg_for(arch: str, shape: str, extra_variant: str = ""):
+    cfg = get_config(arch, variant=extra_variant)
+    ok, why = applicable(cfg, shape)
+    variant = extra_variant
+    if not ok and shape == "long_500k" and cfg.has_decode:
+        variant = ("swa+" + extra_variant) if extra_variant else "swa"
+        cfg = get_config(arch, variant=variant)  # serving variant (DESIGN §4)
+        ok, why = applicable(cfg, shape)
+    return cfg, ok, why, variant
+
+
+def lower_one(arch: str, shape: str, multi_pod: bool, moe_impl: str = "ep",
+              pin_attn: bool = True, variant: str = ""):
+    """Returns (lowered, compiled, record) or raises.
+
+    pin_attn=False reproduces the pre-optimization baseline (no attention
+    activation sharding pin — EXPERIMENTS.md §Perf iteration 1);
+    variant="int8" lowers the quantized-KV serving variant."""
+    cfg, ok, why, variant = _cfg_for(arch, shape, variant)
+    if not ok:
+        return None, None, {"arch": arch, "shape": shape,
+                            "mesh": "multi" if multi_pod else "single",
+                            "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    attn_mod.set_mesh(mesh if pin_attn else None)
+    kind = SHAPES[shape]["kind"]
+    B = SHAPES[shape]["global_batch"]
+    T = SHAPES[shape]["seq_len"]
+    specs = input_specs(cfg, shape, DTYPE)
+    pshapes = params_shapes(cfg, DTYPE)
+    pspec = partition.param_specs(cfg, pshapes, mesh)
+    sh = lambda tree: partition.to_shardings(mesh, tree)
+    mi = moe_impl if cfg.n_experts else "local"
+
+    if kind == "train":
+        opt_shapes = jax.eval_shape(opt_mod.init, pshapes)
+        ospec = {"m": pspec, "v": pspec, "step": P()}
+        bspec = partition.batch_specs(cfg, specs["batch"], mesh)
+        step = train_loop.make_train_step(
+            cfg, opt_mod.AdamWConfig(), moe_impl=mi, mesh=mesh, remat=True)
+        jitted = jax.jit(
+            step,
+            in_shardings=(sh(pspec), sh(ospec), sh(bspec)),
+            out_shardings=(sh(pspec), sh(ospec),
+                           sh(jax.tree.map(lambda _: P(),
+                                           {"loss": 0, "tokens": 0,
+                                            "grad_norm": 0, "lr": 0}))),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(pshapes, opt_shapes, specs["batch"])
+    elif kind == "prefill":
+        bspec = partition.batch_specs(
+            cfg, {k: v for k, v in specs.items()}, mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, B, T, DTYPE))
+        cspec = partition.cache_specs(cfg, cache_shapes, mesh, B)
+        lspec = partition.logits_spec(cfg, mesh, B)
+
+        def prefill_fn(params, inputs):
+            return tfm.prefill(cfg, params, cache_len=T, moe_impl=mi,
+                               mesh=mesh, **inputs)
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(sh(pspec), sh(bspec)),
+            out_shardings=(sh(lspec), sh({"pos": P(batch_axes(mesh, B)),
+                                          "groups": cspec["groups"]})))
+        lowered = jitted.lower(pshapes, specs)
+    else:  # decode
+        cspec = partition.cache_specs(cfg, specs["cache"], mesh, B)
+        lspec = partition.logits_spec(cfg, mesh, B)
+        tok_spec = P(batch_axes(mesh, B))
+
+        def decode_fn(params, token, cache):
+            return tfm.decode_step(cfg, params, token, cache, moe_impl=mi,
+                                   mesh=mesh)
+        jitted = jax.jit(
+            decode_fn,
+            in_shardings=(sh(pspec), NamedSharding(mesh, tok_spec),
+                          sh(cspec)),
+            out_shardings=(sh(lspec), sh(cspec)),
+            donate_argnums=(2,))
+        lowered = jitted.lower(pshapes, specs["token"], specs["cache"])
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    n_dev = mesh.size
+    hlo_txt = compiled.as_text()
+    mf = model_flops(cfg, shape)
+    terms = hlo_analysis.analyze(compiled, n_dev, mf)
+    stats_fused = hlo_analysis.module_stats(hlo_txt, fused_kernels=True)
+    terms_fused = hlo_analysis.RooflineTerms(
+        flops_per_device=stats_fused.flops,
+        bytes_per_device=stats_fused.bytes,
+        coll_bytes_per_device=sum(stats_fused.coll.values()),
+        n_devices=n_dev, model_flops=mf)
+    record = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "multi" if multi_pod else "single",
+        "n_devices": n_dev, "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "roofline": terms.as_dict(),
+        "roofline_fused": terms_fused.as_dict(),
+        "collectives": {k: v for k, v in
+                        hlo_analysis.module_stats(hlo_txt).coll.items()},
+    }
+    return lowered, compiled, record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    try:
+        with open(args.out) as f:
+            results = {tuple(k.split("|")): v
+                       for k, v in json.load(f).items()}
+    except (FileNotFoundError, json.JSONDecodeError):
+        results = {}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in results and "error" not in results[key]:
+                    continue
+                label = f"{arch} x {shape} x {key[2]}"
+                print(f"=== {label} ===", flush=True)
+                try:
+                    t0 = time.time()
+                    _, compiled, rec = lower_one(arch, shape, mp)
+                    if compiled is None:
+                        print(f"  SKIP: {rec['skipped']}")
+                    else:
+                        per_dev_arg = rec["memory"]["argument_bytes"]
+                        print(f"  compiled in {rec['compile_s']}s; "
+                              f"args/dev={per_dev_arg/2**30:.2f}GiB "
+                              f"temp/dev={rec['memory']['temp_bytes']/2**30:.2f}GiB")
+                        for tag in ("roofline", "roofline_fused"):
+                            r = rec[tag]
+                            print(f"  {tag}: compute={r['compute_s']:.4f}s "
+                                  f"memory={r['memory_s']:.4f}s "
+                                  f"collective={r['collective_s']:.4f}s "
+                                  f"dominant={r['dominant']} "
+                                  f"useful={r['useful_ratio']:.2f}")
+                    results[key] = rec
+                except Exception as e:
+                    print(f"  FAIL: {type(e).__name__}: {e}")
+                    traceback.print_exc()
+                    results[key] = {"arch": arch, "shape": shape,
+                                    "mesh": key[2],
+                                    "error": f"{type(e).__name__}: {e}"}
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump({"|".join(k): v for k, v in results.items()},
+                              f, indent=1)
+
+    n_err = sum(1 for v in results.values() if "error" in v)
+    print(f"\n{len(results)} records, {n_err} errors -> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

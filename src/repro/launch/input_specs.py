@@ -1,0 +1,98 @@
+"""ShapeDtypeStruct stand-ins for every (arch x input-shape) pair.
+
+No device allocation: the dry-run lowers against these.  Decode shapes
+build a cache spec via jax.eval_shape over init_cache.
+
+Shapes (task spec):
+    train_4k     seq 4096   global_batch 256   train_step
+    prefill_32k  seq 32768  global_batch 32    prefill
+    decode_32k   seq 32768  global_batch 128   serve_step (1 token + cache)
+    long_500k    seq 524288 global_batch 1     serve_step, sub-quadratic only
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped).  Encoder-only archs have no decode;
+    full-attention archs need the SWA variant for long_500k."""
+    kind = SHAPES[shape]["kind"]
+    if kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, "full attention at 524k context: requires +swa variant"
+    if kind == "train" and cfg.arch_type == "vlm" and False:
+        pass
+    return True, ""
+
+
+def _audio_frames(cfg, B, T, dtype):
+    return jax.ShapeDtypeStruct((B, T, cfg.d_model), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str, dtype=jnp.bfloat16):
+    """Returns a dict of ShapeDtypeStructs for the given input shape."""
+    info = SHAPES[shape]
+    B, T, kind = info["global_batch"], info["seq_len"], info["kind"]
+    tok = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+
+    if kind == "train":
+        if cfg.is_encoder:
+            batch = {"embeds": _audio_frames(cfg, B, T, dtype),
+                     "labels": tok((B, T))}
+        else:
+            batch = {"tokens": tok((B, T))}
+            if cfg.arch_type == "vlm":
+                batch["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vision_tokens, cfg.d_vision), dtype)
+        return {"batch": batch}
+
+    if kind == "prefill":
+        out = {"lengths": tok((B,))}
+        if cfg.is_encoder:
+            out["embeds"] = _audio_frames(cfg, B, T, dtype)
+        else:
+            out["tokens"] = tok((B, T))
+            if cfg.arch_type == "vlm":
+                out["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_vision_tokens, cfg.d_vision), dtype)
+        return out
+
+    # decode: ONE new token + cache covering `seq_len` context
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, T, dtype))
+    return {"token": tok((B,)), "cache": cache}
+
+
+def params_shapes(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: tfm.init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """MODEL_FLOPS per §Roofline: 6·N_active·D for training, 2·N_active·D
+    for inference forward passes (D = tokens processed)."""
+    info = SHAPES[shape]
+    B, T, kind = info["global_batch"], info["seq_len"], info["kind"]
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * B * T
+    if kind == "prefill":
+        return 2.0 * n * B * T
+    return 2.0 * n * B          # decode: one token per sequence

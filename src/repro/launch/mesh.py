@@ -1,0 +1,36 @@
+"""Production meshes.  Defined as FUNCTIONS so importing this module never
+touches jax device state (jax locks the device count on first init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist —
+    used by distributed tests and the serve/train launchers."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh, batch_size: int):
+    """Largest prefix of (pod, data) axes that divides batch_size."""
+    names = [n for n in ("pod", "data") if n in mesh.axis_names]
+    use = []
+    div = 1
+    for n in names:
+        size = mesh.shape[n]
+        if batch_size % (div * size) == 0:
+            use.append(n)
+            div *= size
+    if not use:
+        return None
+    return tuple(use) if len(use) > 1 else use[0]

@@ -1,0 +1,88 @@
+"""Training launcher with mesh-sharded params (pjit/GSPMD).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 50 [--data 2 --model 2] [--ckpt results/ckpt.npz]
+
+--smoke trains the reduced config on CPU (real steps, loss must drop);
+without it the full config is sharded per repro/sharding/partition.py —
+on this container that is only useful with fake devices (see dryrun for
+the compile-only path).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data import tokens as data_tokens
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tfm
+from repro.sharding import context as shctx
+from repro.sharding import partition
+from repro.train import checkpoint, optimizer, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.data * args.model > 1:
+        mesh = make_host_mesh(args.data, args.model)
+        shctx.set_mesh(mesh)
+
+    key = jax.random.PRNGKey(0)
+    params = tfm.init_params(cfg, key)
+    opt_cfg = optimizer.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                    total_steps=args.steps)
+    opt_state = optimizer.init(params)
+    mi = "local" if not cfg.n_experts or mesh is None else "ep"
+    step_fn = train_loop.make_train_step(cfg, opt_cfg, moe_impl=mi,
+                                         mesh=mesh, remat=not args.smoke)
+    if mesh is not None:
+        pspec = partition.param_specs(cfg, params, mesh)
+        sh = lambda t: partition.to_shardings(mesh, t)
+        params = jax.device_put(params, sh(pspec))
+        opt_state = jax.device_put(
+            opt_state, sh({"m": pspec, "v": pspec,
+                           "step": jax.sharding.PartitionSpec()}))
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn)
+
+    it = data_tokens.batches(cfg, args.batch, args.seq)
+    t0 = time.perf_counter()
+    first_loss = last_loss = None
+    for step in range(args.steps):
+        params, opt_state, metrics = step_fn(params, opt_state, next(it))
+        if step == 0:
+            first_loss = float(metrics["loss"])
+        last_loss = float(metrics["loss"])
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss={last_loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e}", flush=True)
+    dt = time.perf_counter() - t0
+    print(f"{args.steps} steps in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s); "
+          f"loss {first_loss:.3f} -> {last_loss:.3f}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, params, opt_state,
+                        meta={"steps": args.steps})
+        print(f"checkpoint -> {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

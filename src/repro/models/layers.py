@@ -1,0 +1,99 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings, init helpers.
+
+Parameters are plain nested dicts of jnp arrays (pytrees).  Attention
+projection weights are stored with FUSED head dims — ``(d_model, H*Dh)``
+— so every assigned architecture's projections shard evenly on a 16-way
+``model`` mesh axis (40- and 10-head configs do not divide 16, but their
+fused dims do; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def head_rms_norm(x, w, eps: float = 1e-6):
+    """Per-head RMSNorm over d_head (qwen3 qk-norm). x: (..., H, Dh)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE ----
+def rope_angles(positions, d_head: int, theta: float):
+    """positions: (...,) int -> cos,sin (..., d_head//2) f32."""
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, T, H, Dh); cos/sin: (B, T, Dh//2) or (T, Dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x1f * sin + x2f * cos], axis=-1
+    ).astype(dt)
+
+
+# ----------------------------------------------------------------- MLP ----
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "sq_relu":
+        return {
+            "up": dense_init(ks[0], d_model, d_ff, dtype),
+            "down": dense_init(ks[1], d_ff, d_model, dtype),
+        }
+    return {
+        "gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "up": dense_init(ks[1], d_model, d_ff, dtype),
+        "down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    if act == "sq_relu":
+        h = jnp.maximum(x @ p["up"], 0.0)
+        return (h * h) @ p["down"]
+    h = x @ p["up"]
+    g = x @ p["gate"]
+    if act == "silu":
+        g = jax.nn.silu(g)
+    elif act == "gelu":
+        g = jax.nn.gelu(g)
+    else:
+        raise ValueError(act)
+    return (g * h) @ p["down"]
+
+
+# ----------------------------------------------------------- embedding ----
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32)
+            * d_model ** -0.5).astype(dtype)
+
+
+def embed_apply(emb, tokens):
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed_apply(w, x):
+    """w: (vocab, d) head (possibly tied); returns logits f32."""
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32).T)

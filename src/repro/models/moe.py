@@ -1,0 +1,234 @@
+"""Mixture-of-Experts FFN with three execution paths.
+
+* ``moe_dense_ref``   — computes every expert for every token and combines
+  with the top-k gate one-hot.  O(E) FLOPs; only sane for tiny smoke/test
+  configs.  This is the correctness oracle.
+* ``moe_local``       — sort-based: replicate-free grouped matmul via
+  ``jax.lax.ragged_dot`` after an argsort of (token, expert) pairs.
+  Active-FLOPs only.  Used on a single device and *inside* the EP path.
+* ``moe_ep``          — expert-parallel shard_map: experts sharded over the
+  ``data`` mesh axis (EP), each expert's d_ff sharded over ``model`` (TP).
+  Tokens are routed with a fixed-capacity ``all_to_all`` over ``data``,
+  computed with ragged_dot, partial-summed over ``model``, and routed
+  back.  This is the TPU-native adaptation of GPU MoE all-to-all
+  (DESIGN.md §5): per-device weight bytes drop by dp·tp and the dispatch
+  collective is a true ICI all-to-all, not an emulated NCCL pattern.
+
+Routing is top-k softmax with optional top-k re-normalization (qwen3) and
+an optional always-on shared expert (llama4-scout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 6)
+    d, f, E = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    scale = d ** -0.5
+    p = {
+        "router": layers.dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, f, d), jnp.float32) * (f ** -0.5)).astype(dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = layers.mlp_init(ks[4], d, cfg.d_ff, "silu", dtype)
+    return p
+
+
+def router_topk(cfg: ModelConfig, p, x):
+    """x: (T,d) -> gates (T,k) f32, idx (T,k) i32, router probs (T,E)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.router_norm_topk:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def load_balance_loss(cfg: ModelConfig, probs, idx):
+    """Switch-style auxiliary loss (substrate for MoE training)."""
+    E = cfg.n_experts
+    me = probs.mean(0)                                     # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(idx.size, 1)
+    return E * jnp.sum(me * ce)
+
+
+def _expert_ffn_dense(p, x):
+    """x: (T,d) -> (T,E,d): every expert applied to every token."""
+    g = jnp.einsum("td,edf->tef", x, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", x, p["w_up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("tef,efd->ted", h, p["w_down"])
+
+
+def moe_dense_ref(cfg: ModelConfig, p, x):
+    """Oracle path. x: (B,T,d)."""
+    B, T, d = x.shape
+    xt = x.reshape(B * T, d)
+    gates, idx, _ = router_topk(cfg, p, xt)
+    all_out = _expert_ffn_dense(p, xt)                      # (N,E,d)
+    onehot = jax.nn.one_hot(idx, cfg.n_experts, dtype=jnp.float32)
+    comb = jnp.einsum("tk,tke->te", gates, onehot)          # (N,E)
+    out = jnp.einsum("te,ted->td", comb, all_out.astype(jnp.float32))
+    out = out.astype(x.dtype)
+    if cfg.shared_expert:
+        out = out + layers.mlp_apply(p["shared"], xt, "silu")
+    return out.reshape(B, T, d)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def ragged_matmul(x, w, gs):
+    """ragged_dot with a grouped backward.
+
+    The default VJP of ragged_dot on XLA:CPU materializes dense
+    (E, rows, d) mask tensors (≈85 TB/device each on qwen3-moe train_4k —
+    §Perf iteration 2b); this custom VJP expresses both grads as ragged
+    primitives instead:
+        dx = ragged_dot(dy, wᵀ, gs)
+        dw = ragged_dot_general(x, dy, gs)   (ragged contracting dim)
+    """
+    with jax.named_scope(f"grouped_mm:{w.shape[0]}"):
+        return jax.lax.ragged_dot(x, w, gs)
+
+
+def _rmm_fwd(x, w, gs):
+    return ragged_matmul(x, w, gs), (x, w, gs)
+
+
+def _rmm_bwd(res, dy):
+    x, w, gs = res
+    with jax.named_scope(f"grouped_mm:{w.shape[0]}"):
+        dx = jax.lax.ragged_dot(dy, jnp.swapaxes(w, 1, 2), gs)
+        dims = jax.lax.RaggedDotDimensionNumbers(
+            dot_dimension_numbers=(((0,), (0,)), ((), ())),
+            lhs_ragged_dimensions=[0], rhs_group_dimensions=[])
+        dw = jax.lax.ragged_dot_general(x, dy, gs, dims).astype(w.dtype)
+    return dx.astype(x.dtype), dw, None
+
+
+ragged_matmul.defvjp(_rmm_fwd, _rmm_bwd)
+
+
+def _grouped_ffn(wg, wu, wd, xs, group_sizes):
+    """ragged grouped FFN: xs sorted by expert, group_sizes (E_loc,).
+
+    The ``grouped_mm:E`` scope tells the roofline parser that XLA:CPU's
+    dense lowering of ragged_dot (every row x every expert) overcounts
+    FLOPs by E — the TPU grouped-matmul kernel does active rows only
+    (verified: CPU HLO flops = E x analytic; EXPERIMENTS.md §Perf 2)."""
+    g = ragged_matmul(xs, wg, group_sizes)
+    u = ragged_matmul(xs, wu, group_sizes)
+    h = (jax.nn.silu(g.astype(jnp.float32))
+         * u.astype(jnp.float32)).astype(xs.dtype)
+    return ragged_matmul(h, wd, group_sizes)
+
+
+def moe_local(cfg: ModelConfig, p, x):
+    """Single-device sort + ragged_dot path (active FLOPs only)."""
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * T, d)
+    N = xt.shape[0]
+    gates, idx, _ = router_topk(cfg, p, xt)
+
+    flat_e = idx.reshape(-1)                                # (N*k,)
+    order = jnp.argsort(flat_e)
+    tok_of = jnp.arange(N * k) // k
+    xs = xt[tok_of[order]]                                  # (N*k, d)
+    group_sizes = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    ys = _grouped_ffn(p["w_gate"], p["w_up"], p["w_down"], xs, group_sizes)
+
+    inv = jnp.argsort(order)
+    ys = ys[inv].reshape(N, k, d).astype(jnp.float32)
+    out = (ys * gates[..., None]).sum(1).astype(x.dtype)
+    if cfg.shared_expert:
+        out = out + layers.mlp_apply(p["shared"], xt, "silu")
+    return out.reshape(B, T, d)
+
+
+# ------------------------------------------------------------------ EP ----
+def moe_ep(cfg: ModelConfig, p, x, *, axis_ep: str = "data",
+           axis_tp: str = "model"):
+    """Expert-parallel body — call INSIDE shard_map.
+
+    Per-device views:
+      x       : (B_loc, T, d)          tokens of this data shard
+      router  : (d, E) replicated
+      w_gate  : (E_loc, d, f_loc)      E over `data`, f over `model`
+      w_up    : (E_loc, d, f_loc)
+      w_down  : (E_loc, f_loc, d)
+    """
+    dp = jax.lax.axis_size(axis_ep)
+    my = jax.lax.axis_index(axis_ep)
+    B, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // dp
+    xt = x.reshape(B * T, d)
+    N = xt.shape[0]
+    gates, idx, _ = router_topk(cfg, p, xt)
+
+    # --- dispatch: fixed capacity per destination shard -------------------
+    flat_e = idx.reshape(-1)                               # (N*k,)
+    dest = flat_e // E_loc                                 # owner data-shard
+    cap = int(max(8, round(cfg.capacity_factor * N * k / dp)))
+    order = jnp.argsort(dest)                              # stable
+    dest_s = dest[order]
+    tok_of = (jnp.arange(N * k) // k)[order]
+    eloc_s = (flat_e % E_loc)[order]
+    # slot within destination bucket
+    pos_in_dest = jnp.arange(N * k) - jnp.searchsorted(dest_s, dest_s, side="left")
+    keep = pos_in_dest < cap                               # overflow -> dropped
+    send_x = jnp.zeros((dp, cap, d), xt.dtype)
+    send_e = jnp.zeros((dp, cap), jnp.int32)               # default: expert 0,
+    send_src = jnp.full((dp, cap), -1, jnp.int32)          # zero input, dropped
+    rows = jnp.where(keep, dest_s, dp)                     # OOB row -> dropped
+    cols = jnp.minimum(pos_in_dest, cap - 1)
+    send_x = send_x.at[rows, cols].set(xt[tok_of], mode="drop")
+    send_e = send_e.at[rows, cols].set(eloc_s, mode="drop")
+    send_src = send_src.at[rows, cols].set(order, mode="drop")
+
+    recv_x = jax.lax.all_to_all(send_x, axis_ep, 0, 0, tiled=False)
+    recv_e = jax.lax.all_to_all(send_e, axis_ep, 0, 0, tiled=False)
+    # recv_*: (dp, cap, ...) tokens sent TO my experts, from each source.
+
+    # --- grouped compute on local experts ---------------------------------
+    # Unused slots carry expert id 0 with zero inputs: they flow through the
+    # grouped FFN as zero rows (correct, slightly wasteful) and their results
+    # are dropped at combine time via send_src == -1.
+    xs_all = recv_x.reshape(dp * cap, d)
+    es_all = recv_e.reshape(dp * cap)
+    o2 = jnp.argsort(es_all)
+    xs = xs_all[o2]
+    gs = jnp.zeros((E_loc,), jnp.int32).at[es_all].add(1)  # sums to dp*cap
+    ys = _grouped_ffn(p["w_gate"], p["w_up"], p["w_down"], xs, gs)
+    ys = jnp.zeros_like(ys).at[o2].set(ys)                 # unsort
+    ys = ys.reshape(dp, cap, d)
+    # TP partial sums over f_loc:
+    ys = jax.lax.psum(ys.astype(jnp.float32), axis_tp).astype(xt.dtype)
+
+    back = jax.lax.all_to_all(ys, axis_ep, 0, 0, tiled=False)
+    # back[s, c] corresponds to send slot (s, c) of THIS shard.
+
+    # --- combine -----------------------------------------------------------
+    flat_out = jnp.zeros((N * k, d), jnp.float32)
+    src = send_src.reshape(dp * cap)
+    upd = back.reshape(dp * cap, d).astype(jnp.float32)
+    flat_out = flat_out.at[jnp.where(src >= 0, src, N * k)].add(
+        upd, mode="drop")
+    ys_tok = flat_out.reshape(N, k, d)
+    out = (ys_tok * gates[..., None]).sum(1).astype(x.dtype)
+    if cfg.shared_expert:
+        shared = layers.mlp_apply(p["shared"], xt, "silu")
+        shared = jax.lax.psum(shared.astype(jnp.float32), axis_tp).astype(x.dtype)
+        out = out + shared
+    return out.reshape(B, T, d)

@@ -1,0 +1,116 @@
+"""RG-LRU recurrent block (recurrentgemma / Griffin, arXiv:2402.19427).
+
+Recurrent branch: x -> W_x -> temporal conv (width 4) -> RG-LRU; gate
+branch: x -> W_g -> GeLU; output: (h ⊙ gate) @ W_o.
+
+RG-LRU (per channel, diagonal — hence associative-scannable):
+    r_t = σ(W_r x_t)                      recurrence gate
+    i_t = σ(W_i x_t)                      input gate
+    log a_t = -c · softplus(Λ) · r_t      (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+Prefill uses ``jax.lax.associative_scan`` (parallel over time — the
+TPU-native replacement for a CUDA sequential kernel); decode is O(1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 7)
+    return {
+        "wx": layers.dense_init(ks[0], d, w, dtype),
+        "wg": layers.dense_init(ks[1], d, w, dtype),
+        "wo": layers.dense_init(ks[2], w, d, dtype),
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32)
+                 * (cfg.conv_width * w) ** -0.5).astype(dtype),
+        "wr": layers.dense_init(ks[4], w, w, jnp.float32, scale=w ** -0.5),
+        "wi": layers.dense_init(ks[5], w, w, jnp.float32, scale=w ** -0.5),
+        "lam": jnp.linspace(0.9, 4.0, w, dtype=jnp.float32),  # softplus^-1 spread
+    }
+
+
+def _conv1d(x, kernel, state):
+    """Causal temporal conv. x: (B,T,w); kernel: (cw,w); state: (B,cw-1,w)."""
+    cw = kernel.shape[0]
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return out, new_state
+
+
+def _rglru_gates(p, x):
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wr"])
+    i = jax.nn.sigmoid(xf @ p["wi"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated_x
+
+
+def rglru_scan(p, x, h0, lengths=None):
+    """x: (B,T,w); h0: (B,w). Parallel associative scan over T."""
+    a, b = _rglru_gates(p, x)                    # (B,T,w) each, f32
+    if lengths is not None:
+        valid = (jnp.arange(x.shape[1])[None] < lengths[:, None])[..., None]
+        a = jnp.where(valid, a, 1.0)             # identity past the end
+        b = jnp.where(valid, b, 0.0)
+    # fold h0 into the first step: h_1 = a_1 h0 + b_1
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(p, x, h0):
+    """One-token update. x: (B,1,w)."""
+    a, b = _rglru_gates(p, x)
+    h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+    return h[:, None], h
+
+
+def rec_block_forward(cfg: ModelConfig, p, x, state, lengths=None):
+    """x: (B,T,d); state: {"h": (B,w), "conv": (B,cw-1,w)}."""
+    gate = jax.nn.gelu(x @ p["wg"])
+    xr = x @ p["wx"]
+    xr_conv, conv_state = _conv1d(xr, p["conv"], state["conv"])
+    if lengths is not None:
+        # conv state must hold the last cw-1 *valid* inputs of each sequence
+        cw1 = conv_state.shape[1]
+        T = xr.shape[1]
+        xp = jnp.concatenate([state["conv"], xr], axis=1)   # (B, cw-1+T, w)
+        idx = jnp.clip(lengths[:, None] + jnp.arange(cw1)[None], 0, cw1 + T - 1)
+        conv_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
+    h, h_last = rglru_scan(p, xr_conv, state["h"], lengths)
+    out = (h.astype(x.dtype) * gate) @ p["wo"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def rec_block_decode(cfg: ModelConfig, p, x, state):
+    gate = jax.nn.gelu(x @ p["wg"])
+    xr = x @ p["wx"]
+    xr, conv_state = _conv1d(xr, p["conv"], state["conv"])
+    h, h_last = rglru_step(p, xr, state["h"])
+    out = (h.astype(x.dtype) * gate) @ p["wo"]
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }

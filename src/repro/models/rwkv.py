@@ -1,0 +1,157 @@
+"""RWKV6 ("Finch") block — attention-free SSM with data-dependent decay.
+
+Faithful to arXiv:2404.05892 in structure: token-shift interpolation,
+per-head WKV state `S ∈ R^{Dk×Dv}` updated with a *data-dependent* diagonal
+decay `w_t = exp(-exp(ŵ_t))` where `ŵ_t` is produced by a low-rank (LoRA)
+projection of the shifted input — the headline v6 feature.  Simplification
+(noted in DESIGN.md): the r/k/v/g token-shift mixes use static learned
+lerp coefficients (v5-style) rather than the five-way data-dependent
+ddlerp; the decay keeps full data dependence.
+
+Recurrence per head (Dk = Dv = head_size):
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Prefill runs a lax.scan over time (the Pallas ``wkv6`` kernel is the
+TPU-optimized time-blocked version); decode is O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelConfig
+
+
+def rwkv_n_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % cfg.rwkv_head_size == 0
+    return cfg.d_model // cfg.rwkv_head_size
+
+
+def rwkv_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = rwkv_n_heads(cfg)
+    r = cfg.rwkv_lora_decay
+    ks = jax.random.split(key, 12)
+    dcm = int(3.5 * d)  # channel-mix hidden (v6 uses 3.5x)
+    return {
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_g": jnp.full((d,), 0.5, dtype),
+        "mix_w": jnp.full((d,), 0.5, dtype),
+        "wr": layers.dense_init(ks[0], d, d, dtype),
+        "wk": layers.dense_init(ks[1], d, d, dtype),
+        "wv": layers.dense_init(ks[2], d, d, dtype),
+        "wg": layers.dense_init(ks[3], d, d, dtype),
+        "wo": layers.dense_init(ks[4], d, d, dtype),
+        # data-dependent decay LoRA: w_hat = w0 + tanh(x @ A) @ B
+        "w0": (jnp.zeros((d,), jnp.float32) - 0.5).astype(jnp.float32),
+        "wA": layers.dense_init(ks[5], d, r, jnp.float32),
+        "wB": (jax.random.normal(ks[6], (r, d), jnp.float32) * 0.01),
+        "u": (jax.random.normal(ks[7], (H, hs), jnp.float32) * 0.1),
+        "ln_x": jnp.zeros((d,), dtype),  # group-norm scale on wkv output
+        # channel-mix
+        "cmix_r": jnp.full((d,), 0.5, dtype), "cmix_k": jnp.full((d,), 0.5, dtype),
+        "cr": layers.dense_init(ks[8], d, d, dtype),
+        "ck": layers.dense_init(ks[9], d, dcm, dtype),
+        "cv": layers.dense_init(ks[10], dcm, d, dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: prepend x_prev, drop last. x: (B,T,d), x_prev: (B,d)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def wkv_scan(r, k, v, w, u, s0):
+    """Sequential WKV recurrence.
+
+    r,k,v,w: (B,T,H,hs) (w = decay in (0,1), f32); u: (H,hs);
+    s0: (B,H,hs,hs) initial state.  Returns (y (B,T,H,hs) f32, sT).
+    """
+    B, T, H, hs = r.shape
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                       # (B,H,hs)
+        kv = kt[..., :, None] * vt[..., None, :]    # (B,H,hs,hs)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    # maps to the Pallas wkv6 kernel (state stays VMEM-resident)
+    with jax.named_scope("vmem_fused:wkv6"):
+        sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), sT
+
+
+def _group_norm(y, scale, H, eps=1e-5):
+    """Per-head LayerNorm of the wkv output. y: (B,T,H,hs) f32."""
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    B, T = y.shape[:2]
+    return yn.reshape(B, T, -1) * (1.0 + scale.astype(jnp.float32))
+
+
+def _last_valid(x, lengths):
+    """x: (B,T,d) -> (B,d) at index lengths-1 (or x[:,-1] if lengths None)."""
+    if lengths is None:
+        return x[:, -1]
+    idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
+def time_mix(cfg: ModelConfig, p, x, x_prev, s0, lengths=None):
+    """x: (B,T,d); x_prev: (B,d) last token of previous chunk; s0 state.
+    Right-padded positions (>= lengths) are masked so the carried state is
+    exactly that of the unpadded sequence.  Returns (out, x_last, sT)."""
+    B, T, d = x.shape
+    H, hs = rwkv_n_heads(cfg), cfg.rwkv_head_size
+    xs = _shift(x, x_prev)
+    xr = _mix(x, xs, p["mix_r"]); xk = _mix(x, xs, p["mix_k"])
+    xv = _mix(x, xs, p["mix_v"]); xg = _mix(x, xs, p["mix_g"])
+    xw = _mix(x, xs, p["mix_w"])
+    r = (xr @ p["wr"]).reshape(B, T, H, hs)
+    k = (xk @ p["wk"]).reshape(B, T, H, hs)
+    v = (xv @ p["wv"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_hat = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    w = jnp.exp(-jnp.exp(w_hat)).reshape(B, T, H, hs)      # (0,1) decay
+    if lengths is not None:
+        valid = (jnp.arange(T)[None] < lengths[:, None])[..., None, None]
+        k = jnp.where(valid, k, 0.0)           # no kv injection when padded
+        w = jnp.where(valid, w, 1.0)           # identity decay when padded
+    y, sT = wkv_scan(r, k, v, w, p["u"], s0)
+    y = _group_norm(y, p["ln_x"], H)
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    return out, _last_valid(x, lengths), sT
+
+
+def time_mix_decode(cfg: ModelConfig, p, x, x_prev, s0):
+    """One-token time-mix. x: (B,1,d). O(1) state update."""
+    out, x_last, sT = time_mix(cfg, p, x, x_prev, s0)
+    return out, x_last, sT
+
+
+def channel_mix(cfg: ModelConfig, p, x, x_prev, lengths=None):
+    xs = _shift(x, x_prev)
+    xr = _mix(x, xs, p["cmix_r"]); xk = _mix(x, xs, p["cmix_k"])
+    r = jax.nn.sigmoid(xr @ p["cr"])
+    k = jnp.maximum(xk @ p["ck"], 0.0)
+    return r * ((k * k) @ p["cv"]), _last_valid(x, lengths)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, hs = rwkv_n_heads(cfg), cfg.rwkv_head_size
+    return {
+        "s": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_cm": jnp.zeros((batch, cfg.d_model), dtype),
+    }

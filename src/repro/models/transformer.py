@@ -1,0 +1,366 @@
+"""Model assembly: block groups -> lax.scan, forward / prefill / decode.
+
+Every architecture is a sequence of *block groups*; each group is a
+repeated block pattern whose parameters are stacked on a leading axis and
+executed with ``jax.lax.scan`` (so a 100-layer model lowers to HLO the
+size of one pattern).  Caches mirror the grouping: per group, per pattern
+slot, a type-specific state stacked on the repeat axis.
+
+Public API (all pure functions of (cfg, params, ...)):
+
+    init_params(cfg, key, dtype)
+    forward(cfg, params, ...)            -> logits (B,T,V)   [train/encoder]
+    prefill(cfg, params, ...)            -> (last_logits, cache)
+    decode_step(cfg, params, token, cache) -> (logits, cache)
+    init_cache(cfg, batch, cache_len)    -> zeroed cache pytree
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import context as shctx
+
+from . import attention, layers, moe, rglru, rwkv
+from .config import (BLOCK_ATTN, BLOCK_CROSS, BLOCK_MOE, BLOCK_REC,
+                     BLOCK_RWKV, ModelConfig)
+
+
+# ----------------------------------------------------------------- init ---
+def _block_init(cfg: ModelConfig, btype: str, key, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if btype == BLOCK_ATTN:
+        return {
+            "ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "attn": attention.attn_init(ks[0], cfg, dtype),
+            "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype),
+        }
+    if btype == BLOCK_MOE:
+        return {
+            "ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "attn": attention.attn_init(ks[0], cfg, dtype),
+            "moe": moe.moe_init(ks[1], cfg, dtype),
+        }
+    if btype == BLOCK_CROSS:
+        return {
+            "ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "attn": attention.attn_init(ks[0], cfg, dtype, cross=True),
+            "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype),
+        }
+    if btype == BLOCK_REC:
+        return {
+            "ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "rec": rglru.rglru_init(ks[0], cfg, dtype),
+            "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, "gelu", dtype),
+        }
+    if btype == BLOCK_RWKV:
+        return {
+            "ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+            "rwkv": rwkv.rwkv_init(ks[0], cfg, dtype),
+        }
+    raise ValueError(btype)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + len(cfg.block_groups()))
+    params = {"embed": layers.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+              "ln_f": jnp.zeros((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.embed_init(ks[1], cfg.vocab_size,
+                                              cfg.d_model, dtype)
+    if cfg.arch_type == "vlm":
+        params["vis_proj"] = layers.dense_init(ks[2], cfg.d_vision,
+                                               cfg.d_model, dtype)
+    groups = []
+    for gi, (pattern, reps) in enumerate(cfg.block_groups()):
+        gkey = ks[4 + gi]
+        slot_params = []
+        for j, btype in enumerate(pattern):
+            rkeys = jax.random.split(jax.random.fold_in(gkey, j), reps)
+            slot_params.append(
+                jax.vmap(lambda k: _block_init(cfg, btype, k, dtype))(rkeys))
+        groups.append(tuple(slot_params))
+    params["groups"] = tuple(groups)
+    return params
+
+
+# ---------------------------------------------------------------- cache ---
+def _attn_cache_len(cfg: ModelConfig, cache_len: int) -> int:
+    win = cfg.sliding_window or (
+        cfg.local_window if cfg.arch_type == "hybrid" else 0)
+    return min(cache_len, win) if win else cache_len
+
+
+def effective_window(cfg: ModelConfig) -> int:
+    if cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.arch_type == "hybrid":
+        return cfg.local_window
+    return 0
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.float32):
+    """Zeroed cache; attention caches sized min(cache_len, window)."""
+    S = _attn_cache_len(cfg, cache_len)
+    groups = []
+    for pattern, reps in cfg.block_groups():
+        slots = []
+        for btype in pattern:
+            if btype in (BLOCK_ATTN, BLOCK_MOE):
+                kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+                slot = {
+                    "k": jnp.zeros((reps, batch, S, cfg.n_kv_heads,
+                                    cfg.d_head), kv_dt),
+                    "v": jnp.zeros((reps, batch, S, cfg.n_kv_heads,
+                                    cfg.d_head), kv_dt),
+                }
+                if cfg.kv_cache_dtype == "int8":
+                    slot["k_s"] = jnp.zeros(
+                        (reps, batch, S, cfg.n_kv_heads), jnp.float32)
+                    slot["v_s"] = jnp.zeros(
+                        (reps, batch, S, cfg.n_kv_heads), jnp.float32)
+                slots.append(slot)
+            elif btype == BLOCK_CROSS:
+                slots.append({
+                    "k": jnp.zeros((reps, batch, cfg.n_vision_tokens,
+                                    cfg.n_kv_heads, cfg.d_head), dtype),
+                    "v": jnp.zeros((reps, batch, cfg.n_vision_tokens,
+                                    cfg.n_kv_heads, cfg.d_head), dtype),
+                })
+            elif btype == BLOCK_REC:
+                st = rglru.init_state(cfg, batch, dtype)
+                slots.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape), st))
+            elif btype == BLOCK_RWKV:
+                st = rwkv.init_state(cfg, batch, dtype)
+                slots.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape), st))
+        groups.append(tuple(slots))
+    return {"pos": jnp.zeros((batch,), jnp.int32), "groups": tuple(groups)}
+
+
+# ---------------------------------------------------------- block apply ---
+def _apply_block(cfg: ModelConfig, btype: str, p, x, *, mode: str,
+                 positions=None, lengths=None, cache=None, pos=None,
+                 vis=None, moe_impl="local", mesh=None, cache_len=0):
+    """One block. mode: 'fwd' | 'prefill' | 'decode'.
+    Returns (x, new_cache_slot)."""
+    win = effective_window(cfg)
+    new_cache = cache
+
+    if btype in (BLOCK_ATTN, BLOCK_MOE):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "decode":
+            ctuple = (cache["k"], cache["v"], cache["k_s"], cache["v_s"]) \
+                if cfg.kv_cache_dtype == "int8" else \
+                (cache["k"], cache["v"])
+            a, new_cache = attention.self_attn_decode(
+                cfg, p["attn"], h, pos, ctuple, window=win)
+        else:
+            a, kv = attention.self_attn_forward(
+                cfg, p["attn"], h, positions, lengths,
+                window=win, make_cache=(mode == "prefill"),
+                cache_len=cache_len)
+            if mode == "prefill":
+                new_cache = {"k": kv[0], "v": kv[1]}
+                if cfg.kv_cache_dtype == "int8":
+                    new_cache["k_s"], new_cache["v_s"] = kv[2], kv[3]
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if btype == BLOCK_ATTN:
+            x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
+        else:
+            x = x + _apply_moe(cfg, p["moe"], h, moe_impl, mesh)
+        if mode == "decode":
+            nc = {"k": new_cache[0], "v": new_cache[1]}
+            if cfg.kv_cache_dtype == "int8":
+                nc["k_s"], nc["v_s"] = new_cache[2], new_cache[3]
+            new_cache = nc
+        return x, new_cache
+
+    if btype == BLOCK_CROSS:
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mode == "prefill" or (mode == "fwd" and vis is not None):
+            kv = attention.cross_kv(cfg, p["attn"], vis)
+            if mode == "prefill":
+                new_cache = {"k": kv[0], "v": kv[1]}
+        else:  # decode: reuse cached vision KV
+            kv = (cache["k"], cache["v"])
+        a = attention.cross_attn_forward(cfg, p["attn"], h, kv)
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
+        return x, new_cache
+
+    if btype == BLOCK_REC:
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        state = cache if cache is not None else rglru.init_state(
+            cfg, x.shape[0], x.dtype)
+        if mode == "decode":
+            r, new_state = rglru.rec_block_decode(cfg, p["rec"], h, state)
+        else:
+            r, new_state = rglru.rec_block_forward(cfg, p["rec"], h, state,
+                                                   lengths)
+        x = x + r
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp_apply(p["mlp"], h, "gelu")
+        return x, (new_state if mode != "fwd" else cache)
+
+    if btype == BLOCK_RWKV:
+        state = cache if cache is not None else jax.tree.map(
+            lambda s: s, rwkv.init_state(cfg, x.shape[0], x.dtype))
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        tm, x_tm, s_new = rwkv.time_mix(cfg, p["rwkv"], h, state["x_tm"],
+                                        state["s"], lengths)
+        x = x + tm
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        cm, x_cm = rwkv.channel_mix(cfg, p["rwkv"], h, state["x_cm"], lengths)
+        x = x + cm
+        new_state = {"s": s_new, "x_tm": x_tm, "x_cm": x_cm}
+        return x, (new_state if mode != "fwd" else cache)
+
+    raise ValueError(btype)
+
+
+def _apply_moe(cfg, p, x, impl, mesh):
+    if impl == "ref":
+        return moe.moe_dense_ref(cfg, p, x)
+    if impl == "local":
+        return moe.moe_local(cfg, p, x)
+    if impl == "ep":
+        from jax.sharding import PartitionSpec as P
+        fn = functools.partial(moe.moe_ep, cfg)
+        pspec = {
+            "router": P(None, None),
+            "w_gate": P("data", None, "model"),
+            "w_up": P("data", None, "model"),
+            "w_down": P("data", "model", None),
+        }
+        if cfg.shared_expert:
+            pspec["shared"] = {"gate": P(None, "model"),
+                               "up": P(None, "model"),
+                               "down": P("model", None)}
+        # batch over (pod, data) when divisible; else replicate (every
+        # data shard routes the same tokens to its local experts — the
+        # a2a round-trip stays correct, see moe_ep docstring). B=1 decode.
+        baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        bsz = 1
+        for a in baxes:
+            bsz *= mesh.shape[a]
+        bspec = (baxes if len(baxes) > 1 else baxes[0]) \
+            if x.shape[0] % bsz == 0 else None
+        return jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(pspec, P(bspec, None, None)),
+            out_specs=P(bspec, None, None),
+            check_vma=False,
+        )(p, x)
+    raise ValueError(impl)
+
+
+# -------------------------------------------------------------- drivers ---
+def _embed_input(cfg, params, tokens, embeds):
+    if embeds is not None:
+        return embeds
+    return layers.embed_apply(params["embed"], tokens)
+
+
+def _project_vision(cfg, params, vision_embeds):
+    if vision_embeds is None:
+        return None
+    return vision_embeds @ params["vis_proj"]
+
+
+def _run_groups(cfg, params, x, *, mode, positions=None, lengths=None,
+                cache=None, pos=None, vis=None, moe_impl="local", mesh=None,
+                cache_len=0, remat=False):
+    new_groups = []
+    for gi, (pattern, reps) in enumerate(cfg.block_groups()):
+        gparams = params["groups"][gi]
+        gcache = cache["groups"][gi] if cache is not None else None
+
+        def body(carry, scans):
+            # (§Perf 1c: a replicated-residual pin here measured WORSE —
+            # XLA's weight-gathered sequence-parallel MLP beats
+            # replicated-activations TP at 32k tokens; see EXPERIMENTS.md)
+            xx = carry
+            new_slots = []
+            for j in range(len(pattern)):
+                p_j = scans[j]
+                c_j = scans[len(pattern) + j] if gcache is not None else None
+                xx, nc = _apply_block(
+                    cfg, pattern[j], p_j, xx, mode=mode, positions=positions,
+                    lengths=lengths, cache=c_j, pos=pos, vis=vis,
+                    moe_impl=moe_impl, mesh=mesh, cache_len=cache_len)
+                new_slots.append(nc if nc is not None else 0)
+            return xx, tuple(new_slots)
+
+        if remat:
+            # activation checkpointing per block group: backward recomputes
+            # the block from its input — temp memory drops from
+            # O(layers x activations) to O(layers x d_model carries).
+            body = jax.checkpoint(body,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        scans = tuple(gparams) + (tuple(gcache) if gcache is not None else ())
+        x, new_slot_caches = jax.lax.scan(body, x, scans)
+        new_groups.append(new_slot_caches)
+    return x, tuple(new_groups)
+
+
+def forward(cfg: ModelConfig, params, tokens=None, embeds=None,
+            vision_embeds=None, lengths=None, moe_impl="local", mesh=None,
+            remat=False):
+    """Full-sequence forward, no cache (training / encoder inference)."""
+    x = _embed_input(cfg, params, tokens, embeds)
+    B, T, _ = x.shape
+    vis = _project_vision(cfg, params, vision_embeds)
+    positions = jnp.arange(T)
+    x, _ = _run_groups(cfg, params, x, mode="fwd", positions=positions,
+                       lengths=lengths, vis=vis, moe_impl=moe_impl, mesh=mesh,
+                       remat=remat)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return layers.unembed_apply(head, x)
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeds=None,
+            vision_embeds=None, lengths=None, cache_len: Optional[int] = None,
+            moe_impl="local", mesh=None):
+    """Process full prompts, return (last-token logits, cache)."""
+    x = _embed_input(cfg, params, tokens, embeds)
+    B, T, _ = x.shape
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    cache_len = cache_len or cfg.max_seq_len
+    vis = _project_vision(cfg, params, vision_embeds)
+    positions = jnp.arange(T)
+    cache0 = init_cache(cfg, B, cache_len, x.dtype)
+    x, new_groups = _run_groups(
+        cfg, params, x, mode="prefill", positions=positions, lengths=lengths,
+        cache=cache0, vis=vis, moe_impl=moe_impl, mesh=mesh,
+        cache_len=cache_len)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, jnp.clip(lengths - 1, 0, T - 1)[:, None, None], axis=1)[:, 0]
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(head, last)
+    return logits, {"pos": lengths.astype(jnp.int32), "groups": new_groups}
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, moe_impl="local",
+                mesh=None):
+    """token: (B,) int32 (or (B,d) embeds for encoder-less flows).
+    Returns (logits (B,V), new cache)."""
+    x = layers.embed_apply(params["embed"], token[:, None])
+    pos = cache["pos"]
+    x, new_groups = _run_groups(cfg, params, x, mode="decode", pos=pos,
+                                cache=cache, moe_impl=moe_impl, mesh=mesh)
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(head, x[:, 0])
+    return logits, {"pos": pos + 1, "groups": new_groups}

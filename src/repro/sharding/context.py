@@ -1,0 +1,54 @@
+"""Process-wide activation-sharding context.
+
+Launchers (dryrun, serve, train) register the active mesh here; model
+code pins key activations (residual stream, attention q/k/v) with
+``with_sharding_constraint`` so GSPMD propagation cannot wander into
+pathological layouts (measured: a T-sharded residual stream makes XLA
+all-gather the MLP WEIGHTS every layer — §Perf iteration 1c).
+
+No-ops when no mesh is registered (single-device tests/examples).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX = {"mesh": None}
+
+
+def set_mesh(mesh) -> None:
+    _CTX["mesh"] = mesh
+
+
+def get_mesh():
+    return _CTX["mesh"]
+
+
+def _batch_axes(mesh, batch_size: int):
+    from repro.launch.mesh import batch_axes
+    return batch_axes(mesh, batch_size)
+
+
+def pin(x, *spec_tail):
+    """Constrain (B, *rest) activation: batch over (pod,data), tail as
+    given (use None for replicated dims)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    spec = P(_batch_axes(mesh, x.shape[0]), *spec_tail)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def pin_residual(x):
+    """(B, T, d) residual stream: batch-sharded, replicated over model."""
+    return pin(x, None, None)
+
+
+def pin_heads(x):
+    """(B, T, H, Dh): heads over `model` when divisible."""
+    mesh = _CTX["mesh"]
+    if mesh is None or "model" not in mesh.axis_names:
+        return x
+    if x.shape[2] % mesh.shape["model"] != 0:
+        return x
+    return pin(x, None, "model", None)

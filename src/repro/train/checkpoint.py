@@ -1,0 +1,46 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys (no orbax)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, params, opt_state=None, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blobs = {f"p/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blobs.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+    if meta:
+        blobs.update({f"m/{k}": np.asarray(v) for k, v in meta.items()})
+    np.savez(path, **blobs)
+
+
+def restore(path: str, params_template, opt_template=None):
+    """Restores into the structure of the given templates."""
+    with np.load(path) as z:
+        data = {k: z[k] for k in z.files}
+
+    def fill(template, prefix):
+        flat = _flatten(template)
+        leaves, tdef = jax.tree_util.tree_flatten(template)
+        keys = list(flat.keys())
+        assert len(keys) == len(leaves)
+        restored = [data[f"{prefix}/{k}"] for k in keys]
+        return jax.tree_util.tree_unflatten(
+            tdef, [r.astype(l.dtype) for r, l in zip(restored, leaves)])
+
+    params = fill(params_template, "p")
+    if opt_template is None:
+        return params
+    return params, fill(opt_template, "o")

@@ -1,0 +1,94 @@
+"""Causal-LM training step and loop.
+
+``make_train_step(cfg, opt_cfg)`` builds the pure (params, opt_state,
+batch) -> (params, opt_state, metrics) function used by the launcher, the
+multi-pod dry-run (train_4k shape) and the smoke tests.  Batches are
+dicts: {"tokens": (B,T) i32, "loss_mask": (B,T) f32 or None, and for
+audio: "embeds" (B,T,d), "labels" (B,T); for vlm: + "vision_embeds"}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from . import optimizer
+
+
+def lm_loss(cfg: ModelConfig, params, batch, moe_impl="local", mesh=None,
+            remat=False):
+    """Next-token cross entropy (or frame CE for encoders)."""
+    if cfg.is_encoder:
+        logits = tfm.forward(cfg, params, embeds=batch["embeds"],
+                             moe_impl=moe_impl, mesh=mesh, remat=remat)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+    else:
+        tokens = batch["tokens"]
+        logits = tfm.forward(
+            cfg, params, tokens=tokens[:, :-1],
+            vision_embeds=batch.get("vision_embeds"),
+            moe_impl=moe_impl, mesh=mesh, remat=remat)
+        labels = tokens[:, 1:]
+        mask = batch.get("loss_mask")
+        mask = mask[:, 1:] if mask is not None else None
+    # Vocab-sharded-safe CE: logsumexp reduces the sharded vocab axis with
+    # partial sums, and the correct-class logit comes from a one-hot
+    # masked reduce (fuses — no (B,T,V) gather or one-hot materializes).
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    correct = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - correct
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss, "tokens": mask.sum()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optimizer.AdamWConfig,
+                    moe_impl="local", mesh=None, data_axes=None,
+                    remat=False):
+    """data_axes: mesh axis name(s) to psum gradients over (None = no psum;
+    under pjit/GSPMD the all-reduce is induced by sharding instead)."""
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, moe_impl, mesh, remat),
+            has_aux=True
+        )(params)
+        if data_axes:
+            grads = jax.lax.pmean(grads, data_axes)
+        params, opt_state, opt_metrics = optimizer.apply(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, steps: int, batch_iter, key=None,
+          opt_cfg: optimizer.AdamWConfig | None = None, params=None,
+          log_every: int = 10, callback=None, moe_impl="local"):
+    """Single-host training loop (CPU example / smoke scale)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    opt_cfg = opt_cfg or optimizer.AdamWConfig(total_steps=steps)
+    if params is None:
+        params = tfm.init_params(cfg, key)
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, moe_impl=moe_impl))
+    history = []
+    for step in range(steps):
+        batch = next(batch_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return params, opt_state, history

@@ -1,0 +1,218 @@
+"""BucketServe core: Algorithm 1, Eqs. (1)-(6), scheduler policies.
+
+Property-based tests (hypothesis) pin the system invariants:
+  * buckets always partition [0, L_max) — no gaps, no overlaps;
+  * every queued request sits in the bucket covering its length;
+  * merge restores the single full-range bucket;
+  * Eq. (6) batches never exceed the memory budget;
+  * Eq. (4)/Lloyd boundaries never increase expected waste vs. one bucket.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import (BucketManager, BucketServeScheduler,
+                        DynamicBatchController, MemoryBudget, Request,
+                        SchedulerConfig, TaskType)
+from repro.core import analysis
+from repro.core.request import Request as Req
+
+L_MAX = 32768
+
+
+def mk_reqs(lengths, task=TaskType.OFFLINE):
+    return [Req(rid=i, prompt_len=int(s), max_new_tokens=16, arrival=i * 0.01,
+                task_type=task) for i, s in enumerate(lengths)]
+
+
+# ------------------------------------------------------------ Algorithm 1 -
+class TestBucketManager:
+    def test_initial_single_bucket(self):
+        bm = BucketManager(L_MAX)
+        assert len(bm.buckets) == 1
+        assert (bm.buckets[0].low, bm.buckets[0].up) == (0, L_MAX)
+
+    def test_split_on_pressure(self):
+        bm = BucketManager(L_MAX)
+        # 60% short requests -> majority below midpoint -> split
+        for r in mk_reqs([100] * 12 + [30000] * 8):
+            bm.add(r)
+        bm.adjust(n_max=10)
+        assert len(bm.buckets) == 2
+        assert bm.buckets[0].up == L_MAX // 2 == bm.buckets[1].low
+        # requests partitioned by length
+        assert all(r.prompt_len < L_MAX // 2
+                   for r in bm.buckets[0].requests)
+        assert all(r.prompt_len >= L_MAX // 2
+                   for r in bm.buckets[1].requests)
+
+    def test_no_split_when_majority_long(self):
+        bm = BucketManager(L_MAX)
+        for r in mk_reqs([30000] * 15 + [100] * 5):
+            bm.add(r)
+        bm.adjust(n_max=10)      # only 25% below midpoint < theta=0.5
+        assert len(bm.buckets) == 1
+
+    def test_merge_on_low_load(self):
+        bm = BucketManager(L_MAX)
+        for r in mk_reqs([100] * 12 + [30000] * 8):
+            bm.add(r)
+        bm.adjust(n_max=10)
+        assert len(bm.buckets) == 2
+        bm.pop(bm.buckets[0].requests + bm.buckets[1].requests)
+        for r in mk_reqs([50, 60]):
+            bm.add(r)
+        bm.adjust(n_max=10)      # total 2 < 10 -> merge (lines 11-13)
+        assert len(bm.buckets) == 1
+        assert bm.total() == 2
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(1, L_MAX - 1), min_size=1, max_size=200),
+           st.integers(1, 64))
+    def test_partition_invariant(self, lengths, n_max):
+        """Buckets tile [0, L_max) exactly and cover every request."""
+        bm = BucketManager(L_MAX)
+        for r in mk_reqs(lengths):
+            bm.add(r)
+        for _ in range(4):       # several adjustment rounds
+            bm.adjust(n_max)
+        bounds = bm.boundaries()
+        assert bounds[0] == 0 and bounds[-1] == L_MAX
+        assert bounds == sorted(bounds)
+        assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+        assert bm.total() == len(lengths)
+        for b in bm.buckets:
+            for r in b.requests:
+                assert b.low <= min(r.prompt_len, L_MAX - 1) < b.up
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(st.integers(1, L_MAX - 1), min_size=1, max_size=100))
+    def test_bisect_assignment_matches_linear(self, lengths):
+        a = BucketManager(L_MAX, assignment="linear")
+        b = BucketManager(L_MAX, assignment="bisect")
+        for r in mk_reqs(lengths):
+            a.add(r)
+        for r in mk_reqs(lengths):
+            b.add(r)
+        a.adjust(8), b.adjust(8)
+        a.adjust(8), b.adjust(8)
+        assert a.boundaries() == b.boundaries()
+        assert [len(x) for x in a.buckets] == [len(x) for x in b.buckets]
+
+
+# ----------------------------------------------------------------- Eq 2-4 -
+class TestWasteModel:
+    def test_waste_ratio(self):
+        assert analysis.waste_ratio([100, 100]) == 0.0
+        assert analysis.waste_ratio([50, 100]) == pytest.approx(0.25)
+
+    def test_bucketing_reduces_expected_waste(self):
+        rng = np.random.default_rng(0)
+        lens = np.concatenate([rng.integers(10, 200, 500),
+                               rng.integers(8000, 30000, 500)])
+        one = analysis.expected_waste(lens, [0, L_MAX])
+        two = analysis.expected_waste(lens, [0, L_MAX // 2, L_MAX])
+        assert two < one
+
+    def test_eq4_fixed_point_beats_midpoints(self):
+        rng = np.random.default_rng(1)
+        lens = rng.lognormal(5.0, 1.2, 2000).clip(1, L_MAX - 1)
+        mid = analysis.expected_waste(lens, np.linspace(0, L_MAX, 5))
+        opt = analysis.expected_waste(
+            lens, analysis.optimal_boundaries_kmeans(lens, 4))
+        assert opt <= mid
+
+    def test_kv_cache_eq1(self):
+        # Eq. (1): 2 L H D S B N
+        assert analysis.kv_cache_bytes(2, 4, 64, 128, 2, 8) == \
+            2 * 2 * 4 * 64 * 128 * 2 * 8
+
+
+# ------------------------------------------------------------------ Eq 5-6 -
+class TestBatcher:
+    def _controller(self, memory_model="sum"):
+        cfg = get_config("llama2-13b")
+        budget = MemoryBudget(hbm_bytes_per_device=40 * 2 ** 30, n_devices=2,
+                              weight_bytes=cfg.param_count() * 2)
+        return DynamicBatchController(cfg, budget, memory_model=memory_model,
+                                      decode_reserve=0.0), cfg, budget
+
+    def test_msafe_eq5(self):
+        _, cfg, budget = self._controller()
+        total = 40 * 2 ** 30 * 2
+        remain = total - cfg.param_count() * 2 - 0.05 * total
+        assert budget.m_safe() == pytest.approx(0.9 * remain)
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(16, 4000), min_size=1, max_size=64))
+    def test_eq6_batch_never_exceeds_budget(self, lengths):
+        ctl, cfg, budget = self._controller()
+        reqs = mk_reqs(lengths)
+        batch = ctl.form_batch(reqs)
+        kv = sum(r.prompt_len + r.max_new_tokens for r in batch.requests) \
+            * ctl.kv_per_tok
+        assert batch.requests          # always serves at least one request
+        if len(batch.requests) > 1:
+            assert kv <= budget.m_safe()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(16, 4000), min_size=1, max_size=64))
+    def test_padded_model_never_exceeds_budget(self, lengths):
+        ctl, cfg, budget = self._controller("padded")
+        batch = ctl.form_batch(mk_reqs(lengths))
+        if len(batch.requests) > 1:
+            pad = max(r.prompt_len + r.max_new_tokens for r in batch.requests)
+            pad = ctl._round(pad)
+            assert pad * len(batch.requests) * ctl.kv_per_tok <= \
+                budget.m_safe()
+
+
+# --------------------------------------------------------------- scheduler -
+class TestScheduler:
+    def _sched(self, **kw):
+        cfg = get_config("llama2-13b")
+        budget = MemoryBudget(hbm_bytes_per_device=40 * 2 ** 30, n_devices=2,
+                              weight_bytes=cfg.param_count() * 2)
+        return BucketServeScheduler(cfg, budget, SchedulerConfig(**kw))
+
+    def test_online_bucket_priority(self):
+        s = self._sched()
+        offline = mk_reqs([3000] * 4, TaskType.OFFLINE)
+        online = mk_reqs([120] * 2, TaskType.ONLINE)
+        for i, r in enumerate(online):
+            r.rid += 100
+            r.arrival = 5.0 + i      # online arrived later
+        for r in offline + online:
+            s.on_arrival(r, r.arrival)
+        batch = s.next_prefill_batch(10.0)
+        # online requests must be served despite later arrival
+        assert any(r.task_type == TaskType.ONLINE for r in batch.requests)
+
+    def test_sjf_within_bucket_offline(self):
+        s = self._sched(offline_policy="sjf")
+        reqs = mk_reqs([500, 100, 300], TaskType.OFFLINE)
+        for r in reqs:
+            s.on_arrival(r, r.arrival)
+        batch = s.next_prefill_batch(1.0)
+        lens = [r.prompt_len for r in batch.requests]
+        assert lens == sorted(lens)
+
+    def test_in_flight_tokens_reduce_batch(self):
+        s = self._sched()
+        for r in mk_reqs([2000] * 40, TaskType.OFFLINE):
+            s.on_arrival(r, r.arrival)
+        b1 = s.next_prefill_batch(1.0)
+        s2 = self._sched()
+        s2.monitor.in_flight_tokens = int(s2.batcher.token_budget() * 0.45)
+        for r in mk_reqs([2000] * 40, TaskType.OFFLINE):
+            s2.on_arrival(r, r.arrival)
+        b2 = s2.next_prefill_batch(1.0)
+        assert b2.size < b1.size
+
+    def test_kv_transfer_time_positive(self):
+        s = self._sched()
+        for r in mk_reqs([1000] * 4):
+            s.on_arrival(r, r.arrival)
+        b = s.next_prefill_batch(1.0)
+        assert s.kv_transfer_seconds(b) > 0

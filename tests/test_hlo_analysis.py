@@ -1,0 +1,67 @@
+"""HLO roofline parser: exactness on controlled programs (subprocess with
+fake devices, like tests/test_distributed.py)."""
+from tests.test_distributed import run_devices
+
+
+def test_scan_matmul_flops_exact():
+    run_devices("""
+        from repro.launch.hlo_analysis import module_stats
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        s = lambda *sp: NamedSharding(mesh, P(*sp))
+        w = jax.ShapeDtypeStruct((8, 256, 512), jnp.bfloat16)
+        x = jax.ShapeDtypeStruct((4, 256), jnp.bfloat16)
+        def f(w, x):
+            def body(c, wl):
+                y = c @ wl
+                return y[:, :256] + y[:, 256:], None
+            return jax.lax.scan(body, x, w)[0]
+        c = jax.jit(f, in_shardings=(s(None, None, "model"), s("data", None)),
+                    out_shardings=s("data", None)).lower(w, x).compile()
+        st = module_stats(c.as_text())
+        expect = 8 * 2 * 2 * 256 * (512 // 4)   # layers x 2MNK per device
+        assert abs(st.flops - expect) / expect < 0.01, (st.flops, expect)
+        print("OK")
+    """)
+
+
+def test_collective_bytes_counted_with_trip_count():
+    run_devices("""
+        from repro.launch.hlo_analysis import module_stats
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        mesh = jax.make_mesh((4,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        s = lambda *sp: NamedSharding(mesh, P(*sp))
+        w = jax.ShapeDtypeStruct((6, 128, 128), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+        def f(w, x):
+            def body(c, wl):
+                return c @ wl, None     # row-parallel: AR per layer
+            return jax.lax.scan(body, x, w)[0]
+        c = jax.jit(f, in_shardings=(s(None, "model", None), s(None, None)),
+                    out_shardings=s(None, None)).lower(w, x).compile()
+        st = module_stats(c.as_text())
+        ar = st.coll["all-reduce"]
+        # 6 scan steps x (8x128 f32) = 6 x 4096B = 24576B min
+        assert ar >= 6 * 8 * 128 * 4, st.coll
+        print("OK")
+    """, n=4)
+
+
+def test_fused_scope_zeroes_bytes_not_flops():
+    run_devices("""
+        from repro.launch.hlo_analysis import module_stats
+        a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        def f(x):
+            with jax.named_scope("vmem_fused:test"):
+                y = x @ x
+                y = jax.nn.softmax(y, axis=-1)
+            return y @ x
+        c = jax.jit(f).lower(a).compile()
+        full = module_stats(c.as_text(), fused_kernels=False)
+        fused = module_stats(c.as_text(), fused_kernels=True)
+        assert fused.flops == full.flops          # flops untouched
+        assert fused.bytes < full.bytes           # scoped bytes removed
+        print("OK")
+    """, n=1)

@@ -1,0 +1,139 @@
+"""End-to-end serving: simulator behaviour + real-engine integration."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import (BucketServeScheduler, MemoryBudget, SchedulerConfig,
+                        TaskType)
+from repro.core.baselines import SIM_MODE, hardware_for, make_scheduler
+from repro.core.engine import ServingEngine
+from repro.core.request import Request
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.data.workload import WorkloadSpec, generate
+from repro.models import transformer as tfm
+
+CFG = get_config("llama2-13b")
+
+
+def run_sim(name, spec, n=150):
+    reqs = generate(dataclasses.replace(spec, n_requests=n))
+    hw, nd, nexec = hardware_for(name, A100X4)
+    budget = MemoryBudget(40 * 2 ** 30, nd, CFG.param_count() * 2)
+    sim = Simulator(make_scheduler(name, CFG, budget), CostModel(CFG, hw),
+                    mode=SIM_MODE[name])
+    return sim.run(reqs), nexec
+
+
+class TestSimulator:
+    SPEC = WorkloadSpec(dataset="mixed", rps=8, n_requests=150,
+                        max_model_len=CFG.max_seq_len)
+
+    def test_all_systems_complete(self):
+        for name in SIM_MODE:
+            res, _ = run_sim(name, self.SPEC)
+            finished = res.finished()
+            assert len(finished) + sum(r.dropped for r in res.requests) == \
+                len(res.requests), name
+            for r in finished:
+                assert r.first_token >= r.arrival
+                assert r.finished >= r.first_token
+                assert r.generated == r.max_new_tokens
+
+    # offline = deep queue: the regime of the paper's Fig. 5a throughput
+    # claims (bucketing is only active when requests actually queue)
+    OFFLINE = dataclasses.replace(SPEC, rps=1e6,
+                                  task_type=TaskType.OFFLINE)
+
+    def test_bucketserve_beats_baselines_on_mixed(self):
+        """The paper's headline: higher offline throughput under
+        heterogeneous load than DistServe-like and UELLM-like systems."""
+        ours, _ = run_sim("bucketserve", self.OFFLINE)
+        dist, _ = run_sim("distserve", self.OFFLINE)
+        uellm, _ = run_sim("uellm", self.OFFLINE)
+        assert ours.throughput_tok_s() > dist.throughput_tok_s()
+        assert ours.throughput_tok_s() > uellm.throughput_tok_s()
+
+    def test_bucketserve_padding_efficiency(self):
+        ours, _ = run_sim("bucketserve", self.OFFLINE)
+        dist, _ = run_sim("distserve", self.OFFLINE)
+        assert ours.padding_efficiency() > dist.padding_efficiency()
+
+    def test_no_oom_for_bucketserve(self):
+        """Eq. (5)/(6) memory safety: BucketServe never OOMs."""
+        for rps in (4, 16, 32):
+            spec = dataclasses.replace(self.SPEC, rps=rps)
+            res, _ = run_sim("bucketserve", spec)
+            assert res.oom_events == 0
+
+    def test_bucketing_overhead_below_1pct(self):
+        """Paper Fig. 6a: bucketing+batching overhead < 1% of e2e time."""
+        res, _ = run_sim("bucketserve", self.SPEC)
+        assert res.bucketing_overhead_s < 0.01 * res.makespan
+
+    def test_slo_degrades_with_load(self):
+        lo, _ = run_sim("bucketserve",
+                        dataclasses.replace(self.SPEC, rps=0.5,
+                                            dataset="alpaca"))
+        hi, _ = run_sim("bucketserve",
+                        dataclasses.replace(self.SPEC, rps=64,
+                                            dataset="alpaca"))
+        assert lo.slo_attainment() >= hi.slo_attainment()
+
+
+class TestEngine:
+    def _setup(self, arch="qwen3-14b", max_seq=128, slots=4):
+        cfg = get_smoke_config(arch, max_seq_len=max_seq)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        sched = BucketServeScheduler(cfg, budget,
+                                     SchedulerConfig(max_batch=slots))
+        return cfg, ServingEngine(cfg, params, sched, max_slots=slots,
+                                  cache_len=max_seq)
+
+    def _reqs(self, n, seed=0, lo=8, hi=48):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=i, prompt_len=int(rng.integers(lo, hi)),
+                        max_new_tokens=int(rng.integers(2, 8)), arrival=0.0,
+                        task_type=TaskType.ONLINE) for i in range(n)]
+
+    def test_serves_all_requests(self):
+        _, eng = self._setup()
+        reqs = self._reqs(10)
+        eng.submit(reqs)
+        done = eng.run(max_wall_s=300)
+        assert len(done) == 10
+        for r in done:
+            assert r.generated == r.max_new_tokens
+            assert len(eng.outputs[r.rid]) == r.max_new_tokens
+
+    def test_engine_matches_unbatched_decode(self):
+        """Tokens produced via the batched slot engine equal a plain
+        single-request prefill+decode -> continuous batching is lossless."""
+        cfg, eng = self._setup()
+        reqs = self._reqs(5, seed=3)
+        eng.submit(reqs)
+        eng.run(max_wall_s=300)
+        params = eng.params
+        for r in reqs:
+            toks = jax.numpy.asarray(r.tokens[None, :])
+            lens = jax.numpy.asarray([r.prompt_len])
+            logits, cache = tfm.prefill(cfg, params, tokens=toks,
+                                        lengths=lens, cache_len=128)
+            out = [int(logits.argmax(-1)[0])]
+            for _ in range(r.max_new_tokens - 1):
+                nt = jax.numpy.asarray([out[-1]], jax.numpy.int32)
+                logits, cache = tfm.decode_step(cfg, params, nt, cache)
+                out.append(int(logits.argmax(-1)[0]))
+            assert out == eng.outputs[r.rid], f"rid={r.rid}"
+
+    def test_rwkv_engine(self):
+        """Attention-free arch through the same serving stack."""
+        _, eng = self._setup(arch="rwkv6-3b")
+        reqs = self._reqs(6, seed=5)
+        eng.submit(reqs)
+        done = eng.run(max_wall_s=300)
+        assert len(done) == 6

@@ -1,0 +1,50 @@
+"""Workload generators: distribution + determinism properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.request import TaskType
+from repro.data.workload import WorkloadSpec, generate
+
+
+def test_alpaca_short_longbench_long():
+    a = generate(WorkloadSpec(dataset="alpaca", n_requests=2000, seed=1))
+    l = generate(WorkloadSpec(dataset="longbench", n_requests=2000, seed=1,
+                              max_model_len=65536))
+    am = np.mean([r.prompt_len for r in a])
+    lm = np.median([r.prompt_len for r in l])
+    assert 50 < am < 130          # paper: mean ~83
+    assert lm > 20000             # paper: median ~41k (truncated)
+
+
+def test_mixed_is_bimodal():
+    m = generate(WorkloadSpec(dataset="mixed", n_requests=2000, seed=2,
+                              max_model_len=32768))
+    lens = np.array([r.prompt_len for r in m])
+    short = (lens < 512).mean()
+    assert 0.35 < short < 0.65
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.5, 64.0), st.integers(10, 300), st.integers(0, 99))
+def test_workload_invariants(rps, n, seed):
+    spec = WorkloadSpec(dataset="mixed", rps=rps, n_requests=n, seed=seed,
+                        max_model_len=4096)
+    reqs = generate(spec)
+    assert len(reqs) == n
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)                       # Poisson cumulative
+    for r in reqs:
+        assert 1 <= r.prompt_len < 4096
+        assert r.max_new_tokens >= 1
+        assert r.prompt_len + r.max_new_tokens <= 4096
+    # deterministic given the seed
+    again = generate(spec)
+    assert [r.prompt_len for r in reqs] == [r.prompt_len for r in again]
+
+
+def test_poisson_rate_roughly_matches():
+    spec = WorkloadSpec(dataset="alpaca", rps=10.0, n_requests=2000, seed=3)
+    reqs = generate(spec)
+    measured = len(reqs) / reqs[-1].arrival
+    assert measured == pytest.approx(10.0, rel=0.15)
