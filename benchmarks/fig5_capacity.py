@@ -8,16 +8,19 @@ from __future__ import annotations
 from .common import PAPER_SYSTEMS, emit, online_spec, run_system
 
 CLIENT_RPS = [0.5, 1, 2, 3, 4, 6, 8]
+QUICK_RPS = [1, 4]
 
 
-def main():
+def main(quick: bool = False):
+    client_rps = QUICK_RPS if quick else CLIENT_RPS
+    n = 60 if quick else 150
     rows = []
     peak = {}
     for dataset in ("alpaca", "mixed"):
         for name in PAPER_SYSTEMS:
             best = 0.0
-            for rps in CLIENT_RPS:
-                res, _, _ = run_system(name, online_spec(dataset, rps, n=150))
+            for rps in client_rps:
+                res, _, _ = run_system(name, online_spec(dataset, rps, n=n))
                 srv = res.server_rps()
                 best = max(best, srv)
                 rows.append(["fig5ef_capacity", dataset, name, rps,

@@ -9,12 +9,14 @@ from __future__ import annotations
 from .common import SYSTEMS, emit, offline_spec, run_system
 
 LOADS = [50, 100, 200, 400]
+QUICK_LOADS = [40]
 
 
-def main():
+def main(quick: bool = False):
+    loads = QUICK_LOADS if quick else LOADS
     rows = []
     derived = {}
-    for n in LOADS:
+    for n in loads:
         for name in SYSTEMS:
             res, nexec, wall = run_system(name, offline_spec("mixed", n))
             util = res.busy_utilization(nexec) * res.padding_efficiency()
@@ -28,7 +30,7 @@ def main():
             derived[(name, n)] = res.throughput_tok_s()
     emit(rows, ["table", "system", "n_requests", "tok_s", "out_tok_s",
                 "useful_util", "pad_eff", "oom", "us_per_call"])
-    hi = LOADS[-1]
+    hi = loads[-1]
     for base in ("uellm", "distserve"):
         ratio = derived[("bucketserve", hi)] / max(derived[(base, hi)], 1e-9)
         print(f"fig5a_ratio,bucketserve_vs_{base},{hi},{ratio:.2f},"

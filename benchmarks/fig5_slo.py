@@ -10,12 +10,13 @@ import numpy as np
 from .common import PAPER_SYSTEMS, emit, online_spec, run_system
 
 RPS_GRID = [0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0]
+QUICK_GRID = [0.5, 2.0, 4.0]
 
 
-def attainment_curve(name: str, dataset: str):
+def attainment_curve(name: str, dataset: str, grid=RPS_GRID, n: int = 300):
     out = []
-    for rps in RPS_GRID:
-        res, _, _ = run_system(name, online_spec(dataset, rps, n=300))
+    for rps in grid:
+        res, _, _ = run_system(name, online_spec(dataset, rps, n=n))
         out.append((rps, res.slo_attainment(), res.server_rps()))
     return out
 
@@ -35,12 +36,14 @@ def rps_at(curve, target: float) -> float:
     return best
 
 
-def main():
+def main(quick: bool = False):
+    grid = QUICK_GRID if quick else RPS_GRID
+    n = 60 if quick else 300
     rows = []
     capacity = {}
     for dataset in ("alpaca", "mixed"):
         for name in PAPER_SYSTEMS:
-            curve = attainment_curve(name, dataset)
+            curve = attainment_curve(name, dataset, grid=grid, n=n)
             for rps, att, srv in curve:
                 rows.append(["fig5cd_slo", dataset, name, rps,
                              round(att, 3), round(srv, 3)])
@@ -56,10 +59,10 @@ def main():
               f"ratio={ratio:.2f},paper={paper}")
         # past-knee robustness: attainment at 1.4x the knee load — where
         # bucketing is active (deep queues) the systems separate sharply
-        knee = max(RPS_GRID[0],
-                   min(RPS_GRID[-1], 1.4 * max(dist, RPS_GRID[0])))
+        knee = max(grid[0],
+                   min(grid[-1], 1.4 * max(dist, grid[0])))
         for name in PAPER_SYSTEMS:
-            res, _, _ = run_system(name, online_spec(dataset, knee, n=300))
+            res, _, _ = run_system(name, online_spec(dataset, knee, n=n))
             print(f"fig5cd_pastknee,{dataset},{name},client_rps={knee:.2f},"
                   f"attainment={res.slo_attainment():.3f},"
                   f"server_rps={res.server_rps():.2f}")

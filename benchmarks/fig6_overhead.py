@@ -15,10 +15,12 @@ from repro.core.request import Request, TaskType
 from .common import emit, online_spec, run_system
 
 
-def breakdown():
+def breakdown(quick: bool = False):
     rows = []
-    for rps in (2, 8, 32):
-        res, _, _ = run_system("bucketserve", online_spec("mixed", rps))
+    for rps in ((8,) if quick else (2, 8, 32)):
+        res, _, _ = run_system("bucketserve",
+                               online_spec("mixed", rps,
+                                           n=60 if quick else 200))
         tot = (res.prefill_time_total + res.decode_time_total
                + res.transfer_time_total + res.bucketing_overhead_s)
         rows.append(["fig6a_breakdown", rps,
@@ -31,13 +33,14 @@ def breakdown():
                 "transfer_frac", "bucketing_frac", "overhead_vs_makespan"])
 
 
-def overhead_scaling():
+def overhead_scaling(quick: bool = False):
     """Algorithm 1 wall cost vs. number of buckets (paper Fig. 6b)."""
     rows = []
     rng = np.random.default_rng(0)
-    for target_buckets in (1, 2, 4, 8, 16, 32):
+    n_lens = 512 if quick else 4096
+    for target_buckets in ((1, 4) if quick else (1, 2, 4, 8, 16, 32)):
         bm = BucketManager(32768)
-        lens = np.clip(rng.lognormal(5.5, 1.6, 4096), 1, 32767).astype(int)
+        lens = np.clip(rng.lognormal(5.5, 1.6, n_lens), 1, 32767).astype(int)
         reqs = [Request(rid=i, prompt_len=int(s), max_new_tokens=8,
                         arrival=0.0, task_type=TaskType.OFFLINE)
                 for i, s in enumerate(lens)]
@@ -57,9 +60,9 @@ def overhead_scaling():
     emit(rows, ["table", "n_buckets", "us_per_request", "total_ms"])
 
 
-def main():
-    breakdown()
-    overhead_scaling()
+def main(quick: bool = False):
+    breakdown(quick)
+    overhead_scaling(quick)
 
 
 if __name__ == "__main__":

@@ -23,8 +23,9 @@ V5E_4 = HardwareSpec("v5e-4", 197e12, 819e9, 50e9, 16 * 2 ** 30,
                      prefill_chips=2, decode_chips=2)
 
 
-def main():
+def main(quick: bool = False):
     rows = []
+    n = 60 if quick else 300
     for hw_name, base_hw in (("v5e-4(16GiB)", V5E_4),
                              ("a100x4(40GiB)", A100X4)):
         for variant in ("", "int8"):
@@ -34,7 +35,7 @@ def main():
             sched = make_scheduler("bucketserve", cfg, budget)
             sim = Simulator(sched, CostModel(cfg, hw),
                             mode=SIM_MODE["bucketserve"])
-            res = sim.run(generate(offline_spec("mixed", 300)),
+            res = sim.run(generate(offline_spec("mixed", n)),
                           time_limit=7200)
             rows.append(["kv_quant", hw_name, variant or "bf16",
                          int(sched.batcher.token_budget()),

@@ -20,7 +20,7 @@ def load():
         return {}
 
 
-def main():
+def main(quick: bool = False):
     data = load()
     if not data:
         print("roofline,NO_DATA,run `python -m repro.launch.dryrun --all`")

@@ -1,8 +1,12 @@
 """Benchmark entrypoint: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5_offline,...]
+                                            [--quick]
 
 Prints CSV blocks (``table,...`` rows) plus derived paper-claim ratios.
+``--quick`` runs every table at reduced load (CI smoke: exercises the
+full scheduler/loop stack in a couple of minutes so the perf scripts
+can't silently rot; the printed ratios are NOT paper-comparable).
 """
 from __future__ import annotations
 
@@ -28,18 +32,24 @@ TABLES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced-load smoke pass (CI)")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    failed = []
     for name, fn in TABLES.items():
         if only and name not in only:
             continue
         t0 = time.time()
         print(f"### {name}")
         try:
-            fn()
+            fn(quick=args.quick)
         except Exception as e:  # keep the harness running
+            failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}: {e}")
         print(f"### {name} done in {time.time() - t0:.1f}s\n", flush=True)
+    if failed:
+        sys.exit(f"benchmarks failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

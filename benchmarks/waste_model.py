@@ -12,10 +12,11 @@ from repro.data.workload import WorkloadSpec, generate
 from .common import CFG, emit
 
 
-def main():
+def main(quick: bool = False):
     rows = []
+    n = 512 if quick else 4096
     for dataset in ("alpaca", "longbench", "mixed"):
-        spec = WorkloadSpec(dataset=dataset, rps=1e6, n_requests=4096,
+        spec = WorkloadSpec(dataset=dataset, rps=1e6, n_requests=n,
                             max_model_len=CFG.max_seq_len)
         lens = np.array([r.prompt_len for r in generate(spec)])
 

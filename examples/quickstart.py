@@ -1,11 +1,16 @@
 """Quickstart: BucketServe serving a tiny model on CPU, end to end.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen3-14b]
+                                                 [--chunk 32]
 
 Builds the reduced config, initializes real weights, submits a burst of
 mixed-length requests and serves them through the full stack: adaptive
 bucketing -> memory-safe batch formation -> jitted prefill (one compiled
-executable per bucket pad shape) -> slot-based continuous-batching decode.
+executable per bucket pad shape) -> slot-based continuous-batching
+decode, all orchestrated by the unified event-driven ServingLoop
+(core/serving_loop.py).  ``--chunk N`` turns on chunked prefill: decode
+iterations interleave between N-token prompt chunks instead of stalling
+behind a whole long prefill.
 """
 import argparse
 import sys
@@ -28,6 +33,8 @@ def main():
     ap.add_argument("--arch", default="qwen3-14b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="chunked-prefill span in tokens")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch, max_seq_len=128)
@@ -40,7 +47,7 @@ def main():
     sched = BucketServeScheduler(cfg, budget,
                                  SchedulerConfig(max_batch=args.slots))
     engine = ServingEngine(cfg, params, sched, max_slots=args.slots,
-                           cache_len=128)
+                           cache_len=128, chunk_tokens=args.chunk)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -59,6 +66,9 @@ def main():
     print(f"buckets now: {[(b.low, b.up) for b in sched.buckets.buckets]}")
     print(f"prefill executables compiled: {engine.n_prefill_shapes} "
           f"(bucketing bounds recompilation — DESIGN.md §3)")
+    if args.chunk:
+        print(f"decode steps interleaved between prefill chunks: "
+              f"{engine.interleaved_decode_steps}")
     for r in done[:5]:
         print(f"  rid={r.rid:3d} S={r.prompt_len:3d} new={r.generated:2d} "
               f"out={engine.outputs[r.rid][:8]}")

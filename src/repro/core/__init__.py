@@ -3,5 +3,9 @@ from .request import Request, TaskType                      # noqa: F401
 from .bucket import Bucket, BucketManager                   # noqa: F401
 from .batcher import (DynamicBatchController, FormedBatch,  # noqa: F401
                       MemoryBudget)
-from .scheduler import BucketServeScheduler, SchedulerConfig  # noqa: F401
+from .scheduler import (BucketServeScheduler, SchedulerBase,  # noqa: F401
+                        SchedulerConfig)
 from .monitor import GlobalMonitor                          # noqa: F401
+from .serving_loop import (Clock, ExecutionBackend,         # noqa: F401
+                           LoopConfig, PrefillJob, ServeResult,
+                           ServingLoop, VirtualClock, WallClock)

@@ -20,62 +20,42 @@ real engine can drive any of them:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
 from repro.models.config import ModelConfig
-from .batcher import DynamicBatchController, FormedBatch, MemoryBudget
-from .monitor import GlobalMonitor
-from .request import Request, TaskType
+from .batcher import FormedBatch, MemoryBudget
+from .request import Request
+from .scheduler import SchedulerBase
 
 
-class _BaseScheduler:
+class _BaseScheduler(SchedulerBase):
+    """FCFS-queue baseline base: the shared queue/monitor/OOM-backoff
+    boilerplate lives in SchedulerBase (the loop-facing surface); this
+    adds the flat list queue and greedy take."""
+
     name = "base"
 
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget,
                  max_batch: int = 512, decode_reserve: float = 0.5):
-        self.cfg = cfg
+        super().__init__(cfg, budget, memory_model="sum",
+                         max_batch=max_batch, decode_reserve=decode_reserve)
         self.queue: List[Request] = []
-        self.batcher = DynamicBatchController(
-            cfg, budget, memory_model="sum", max_batch=max_batch,
-            decode_reserve=decode_reserve)
-        self.monitor = GlobalMonitor()
-        self.monitor.kv_budget_tokens = self.batcher.token_budget()
 
-    def on_arrival(self, req: Request, now: float) -> None:
+    def _enqueue(self, req: Request) -> None:
         self.queue.append(req)
-        self.monitor.on_arrival(now, req.prompt_len)
 
     def queued(self) -> int:
         return len(self.queue)
-
-    def notify_oom(self) -> None:
-        """Retry backoff every real system has: shrink the admission cap."""
-        self._oom_shrink = max(0.4, getattr(self, "_oom_shrink", 1.0) * 0.85)
-
-    def _cap_scale(self) -> float:
-        s = getattr(self, "_oom_shrink", 1.0)
-        self._oom_shrink = min(1.0, s * 1.02)      # slow recovery
-        return s
-
-    def admit_decode(self, req: Request) -> None:
-        self.monitor.decode_pool += 1
-        self.monitor.in_flight_tokens += req.prompt_len + req.max_new_tokens
-
-    def release_decode(self, req: Request) -> None:
-        self.monitor.decode_pool -= 1
-        self.monitor.in_flight_tokens -= req.prompt_len + req.max_new_tokens
 
     def _take(self, reqs: List[Request]) -> FormedBatch:
         for r in reqs:
             self.queue.remove(r)
         self.monitor.queue_len -= len(reqs)
-        pad = self.batcher._round(max((r.prompt_len for r in reqs), default=0))
+        pad = self.batcher.round_up(
+            max((r.prompt_len for r in reqs), default=0))
         return FormedBatch(list(reqs), pad)
-
-    def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
-        raise NotImplementedError
 
 
 class StaticBatchScheduler(_BaseScheduler):

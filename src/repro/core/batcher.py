@@ -106,7 +106,7 @@ class DynamicBatchController:
                     break
                 tot = new_tot
             else:  # padded
-                new_pad = max(pad, self._round(clen))
+                new_pad = max(pad, self.round_up(clen))
                 if take and new_pad * (len(take) + 1) > cap:
                     break
                 pad = new_pad
@@ -114,9 +114,11 @@ class DynamicBatchController:
             take.append(r)
             # SSM/hybrid per-request state counts against the budget too
             tot += self.state_per_req / self.kv_per_tok
-        pad_to = self._round(max((r.prompt_len for r in take), default=0))
+        pad_to = self.round_up(max((r.prompt_len for r in take), default=0))
         return FormedBatch(take, pad_to)
 
-    def _round(self, n: int) -> int:
+    def round_up(self, n: int) -> int:
+        """Round a sequence length up to the controller's pad multiple —
+        the padded shape a formed batch compiles/executes at."""
         m = self.pad_multiple
         return -(-n // m) * m if n else 0

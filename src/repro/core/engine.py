@@ -1,22 +1,33 @@
-"""Real JAX serving engine — BucketServe policies driving actual models.
+"""Real JAX execution backend — BucketServe policies driving actual models.
 
-This is the execution layer the simulator's cost model stands in for at
-paper scale: at tiny-model scale (CPU) it runs the *same* scheduler
-objects against real jitted prefill/decode computations, token for token.
+This is the execution layer the cost model (core/simulator.py) stands in
+for at paper scale: at tiny-model scale (CPU) it runs the *same*
+scheduler objects against real jitted prefill/decode computations, token
+for token.  All orchestration — arrivals, batch formation, OOM/slot
+re-queue, chunk interleaving, timing — lives in core/serving_loop.py;
+this module only executes.
 
 TPU-native continuous batching (DESIGN.md §3): the decode pool is a
 FIXED-CAPACITY slot tensor — cache pytree with a leading slot axis, an
 alive mask, and per-slot next-token ids.  Each iteration decodes all
 slots (dead slots compute garbage that is masked); completed requests
-free their slot and new prefilled requests are scattered in.  Static
-shapes throughout: one compiled executable per bucket pad-shape for
-prefill (bucketing bounds the executable count — the recompilation
-argument for bucketing on TPU), one for decode.
+free their slot and new prefilled requests are scattered in with ONE
+batched gather/scatter per cache leaf (not a device round-trip per
+request).  Static shapes throughout: one compiled executable per bucket
+pad-shape for prefill (bucketing bounds the executable count — the
+recompilation argument for bucketing on TPU), one per chunk shape when
+chunked prefill is on, one for decode.
+
+Chunked prefill (DESIGN.md §2): long prompts are split into
+``chunk_tokens``-sized spans; the serving loop interleaves decode
+iterations between spans, so a 2k-token prefill no longer stalls every
+live decode stream.  The chunk offset is a traced scalar — one compiled
+executable serves every offset of a given (chunk_len, batch) shape.
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Optional
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,33 +35,34 @@ import numpy as np
 
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from .batcher import FormedBatch
 from .request import Request
-from .scheduler import BucketServeScheduler
+from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
+                           WallClock, plan_chunks)
 
 
-def _insert_slot(pool_cache, batch_cache, slot: int, b: int):
-    """Copy sequence `b` of a prefill cache into pool slot `slot`."""
-    pos = pool_cache["pos"].at[slot].set(batch_cache["pos"][b])
-    groups = jax.tree.map(
-        lambda pl, bc: pl.at[:, slot].set(bc[:, b]),
-        pool_cache["groups"], batch_cache["groups"])
-    return {"pos": pos, "groups": groups}
+class JaxEngineBackend:
+    """ExecutionBackend over jitted prefill/decode on the local device."""
 
+    prefill_needs_slots = True
 
-class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, scheduler, *,
-                 max_slots: int = 8, cache_len: Optional[int] = None,
-                 moe_impl: str = "local", time_scale: float = 1.0):
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 cache_len: Optional[int] = None, moe_impl: str = "local",
+                 time_scale: float = 1.0,
+                 chunk_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
-        self.sched = scheduler
         self.max_slots = max_slots
         self.cache_len = cache_len or cfg.max_seq_len
         self.moe_impl = moe_impl
-        self.time_scale = time_scale       # virtual seconds per wall second
+        self.chunk_tokens = chunk_tokens
+        self.clock = WallClock(time_scale)
+        self.supports_decode = cfg.has_decode
+        self.flops_per_token = 2.0 * cfg.active_param_count()
 
         self.pool_cache = tfm.init_cache(cfg, max_slots, self.cache_len)
         self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self._slot_of: Dict[int, int] = {}
         self.next_tok = jnp.zeros((max_slots,), jnp.int32)
         self.outputs: Dict[int, List[int]] = {}
         self._prefill_fns: Dict[tuple, callable] = {}
@@ -61,7 +73,7 @@ class ServingEngine:
 
     # ------------------------------------------------------------- jits --
     def _prefill_fn(self, pad_to: int, bsz: int):
-        key = (pad_to, bsz)
+        key = ("prefill", pad_to, bsz)
         if key not in self._prefill_fns:
             cfg, moe_impl = self.cfg, self.moe_impl
 
@@ -73,102 +85,176 @@ class ServingEngine:
             self.n_prefill_shapes += 1
         return self._prefill_fns[key]
 
-    # -------------------------------------------------------------- api --
-    def submit(self, requests: List[Request]) -> None:
+    def _chunk_fn(self, chunk_len: int, bsz: int):
+        key = ("chunk", chunk_len, bsz)
+        if key not in self._prefill_fns:
+            cfg, moe_impl = self.cfg, self.moe_impl
+
+            def fn(p, tokens, cache, start, lengths):
+                return tfm.prefill_chunk(cfg, p, tokens, cache, start,
+                                         lengths, moe_impl=moe_impl)
+            self._prefill_fns[key] = jax.jit(fn)
+            self.n_prefill_shapes += 1
+        return self._prefill_fns[key]
+
+    # --------------------------------------------------------- protocol --
+    def begin(self, requests: Sequence[Request]) -> None:
         for r in requests:
             if r.tokens is None:
                 rng = np.random.default_rng(r.rid)
                 r.tokens = rng.integers(
                     0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
             self.outputs[r.rid] = []
-        self._pending = sorted(requests, key=lambda r: r.arrival)
-        self._t0 = time.perf_counter()
+        self.clock.start()
 
-    def _now(self) -> float:
-        return (time.perf_counter() - self._t0) * self.time_scale
+    def kv_budget_tokens(self) -> float:
+        # slot caches are preallocated at cache_len: memory safety is
+        # structural, the loop's admission control is slot-based
+        return math.inf
 
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self.slot_req) if r is None]
+    def free_slots(self) -> int:
+        return sum(1 for r in self.slot_req if r is None)
 
-    def run(self, max_wall_s: float = 600.0) -> List[Request]:
-        done: List[Request] = []
-        n_total = len(self._pending)
-        arrived = 0
-        while len(done) < n_total:
-            if time.perf_counter() - self._t0 > max_wall_s:
-                break
-            now = self._now()
-            while arrived < n_total and self._pending[arrived].arrival <= now:
-                self.sched.on_arrival(self._pending[arrived], now)
-                arrived += 1
+    def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
+        total = max(batch.pad_to, 8)     # min real-tensor prompt width
+        c = self.chunk_tokens if tfm.supports_chunked_prefill(self.cfg) \
+            else None
+        return plan_chunks(total, c)
 
-            free = self._free_slots()
-            progressed = False
-            if self.sched.queued() and free:
-                batch = self.sched.next_prefill_batch(now)
-                if batch is not None:
-                    reqs = batch.requests
-                    if len(reqs) > len(free):   # slot-capacity clamp
-                        for r in reqs[len(free):]:
-                            self.sched.on_arrival(r, now)
-                        reqs = reqs[:len(free)]
-                    self._do_prefill(reqs, max(batch.pad_to, 8), done)
-                    progressed = True
-            if any(r is not None for r in self.slot_req):
-                self._do_decode_iter(done)
-                progressed = True
-            if not progressed:
-                if arrived < n_total:
-                    time.sleep(min(
-                        0.001,
-                        max(self._pending[arrived].arrival - now, 0)
-                        / self.time_scale))
-                else:
-                    break
-        return done
+    def transfer_seconds(self, batch: FormedBatch) -> float:
+        return 0.0            # prefill writes straight into the slot pool
 
-    # ------------------------------------------------------- internals --
-    def _do_prefill(self, reqs: List[Request], pad_to: int, done):
-        now = self._now()
+    def prefill_chunk(self, job: PrefillJob, idx: int) -> float:
+        reqs = job.batch.requests
         B = len(reqs)
-        toks = np.zeros((B, pad_to), np.int32)
-        lens = np.zeros((B,), np.int32)
-        for i, r in enumerate(reqs):
-            L = min(r.prompt_len, pad_to)
-            toks[i, :L] = r.tokens[:L]
-            lens[i] = L
-            r.prefill_start = now
-        fn = self._prefill_fn(pad_to, B)
-        logits, cache = fn(self.params, jnp.asarray(toks), jnp.asarray(lens))
-        first = jnp.argmax(logits, -1).astype(jnp.int32)
-        now = self._now()
-        for i, r in enumerate(reqs):
-            r.first_token = now
-            r.generated = 1
-            self.outputs[r.rid].append(int(first[i]))
-            if r.max_new_tokens <= 1 or not self.cfg.has_decode:
-                r.finished = now
-                done.append(r)
-                continue
-            slot = self._free_slots()[0]
-            self.pool_cache = _insert_slot(self.pool_cache, cache, slot, i)
-            self.next_tok = self.next_tok.at[slot].set(first[i])
-            self.slot_req[slot] = r
-            self.sched.admit_decode(r)
+        start, clen = job.chunks[idx]
+        h = job.handle
+        if h is None:
+            total = job.chunks[-1][0] + job.chunks[-1][1]
+            toks = np.zeros((B, total), np.int32)
+            lens = np.zeros((B,), np.int32)
+            for i, r in enumerate(reqs):
+                L = min(r.prompt_len, total)
+                toks[i, :L] = r.tokens[:L]
+                lens[i] = L
+            h = job.handle = {
+                "toks": toks, "lens": jnp.asarray(lens), "np_lens": lens,
+                "cache": (tfm.init_cache(self.cfg, B, self.cache_len)
+                          if len(job.chunks) > 1 else None),
+                "first": np.zeros((B,), np.int64),
+            }
+        if len(job.chunks) == 1:
+            fn = self._prefill_fn(clen, B)
+            logits, cache = fn(self.params, jnp.asarray(h["toks"]), h["lens"])
+            h["first"][:] = np.asarray(jnp.argmax(logits, -1))
+            h["cache"] = cache
+        else:
+            fn = self._chunk_fn(clen, B)
+            logits, h["cache"] = fn(
+                self.params, jnp.asarray(h["toks"][:, start:start + clen]),
+                h["cache"], start, h["lens"])
+            last = h["np_lens"] - 1
+            fin = (last >= start) & (last < start + clen)
+            if fin.any():
+                h["first"][fin] = np.asarray(jnp.argmax(logits, -1))[fin]
+        if idx == len(job.chunks) - 1:
+            if len(job.chunks) > 1:
+                h["cache"] = {"pos": h["lens"].astype(jnp.int32),
+                              "groups": h["cache"]["groups"]}
+            self._finish_prefill(job)
+        return 0.0            # wall backend: the loop reads the clock
 
-    def _do_decode_iter(self, done):
+    def _finish_prefill(self, job: PrefillJob) -> None:
+        """First tokens out; batched slot insertion for continuing rows."""
+        h = job.handle
+        slots, rows, firsts = [], [], []
+        free = iter(i for i, r in enumerate(self.slot_req) if r is None)
+        for i, r in enumerate(job.batch.requests):
+            tok = int(h["first"][i])
+            self.outputs[r.rid].append(tok)
+            if r.max_new_tokens <= 1 or not self.cfg.has_decode:
+                continue
+            slot = next(free)
+            self.slot_req[slot] = r
+            self._slot_of[r.rid] = slot
+            slots.append(slot)
+            rows.append(i)
+            firsts.append(tok)
+        if slots:
+            self._insert_slots(h["cache"], slots, rows, firsts)
+        job.handle = None
+
+    def _insert_slots(self, batch_cache, slots: List[int], rows: List[int],
+                      firsts: List[int]) -> None:
+        """Scatter batch rows into pool slots: ONE gather/scatter per
+        cache leaf for the whole batch (vs. a per-request device
+        round-trip pre-refactor)."""
+        sl = jnp.asarray(slots, jnp.int32)
+        rw = jnp.asarray(rows, jnp.int32)
+        pos = self.pool_cache["pos"].at[sl].set(batch_cache["pos"][rw])
+        groups = jax.tree.map(
+            lambda pl, bc: pl.at[:, sl].set(bc[:, rw]),
+            self.pool_cache["groups"], batch_cache["groups"])
+        self.pool_cache = {"pos": pos, "groups": groups}
+        self.next_tok = self.next_tok.at[sl].set(
+            jnp.asarray(firsts, jnp.int32))
+
+    def decode_iter(self, pool: Sequence[Request],
+                    context_tokens: int) -> float:
         logits, self.pool_cache = self._decode_fn(
             self.params, self.next_tok, self.pool_cache)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         self.next_tok = nxt
-        now = self._now()
+        toks = np.asarray(nxt)
         for slot, r in enumerate(self.slot_req):
-            if r is None:
-                continue
-            r.generated += 1
-            self.outputs[r.rid].append(int(nxt[slot]))
-            if r.generated >= r.max_new_tokens:
-                r.finished = now
-                done.append(r)
-                self.slot_req[slot] = None
-                self.sched.release_decode(r)
+            if r is not None:
+                self.outputs[r.rid].append(int(toks[slot]))
+        return 0.0
+
+    def release(self, req: Request) -> None:
+        slot = self._slot_of.pop(req.rid, None)
+        if slot is not None:
+            self.slot_req[slot] = None
+
+
+class ServingEngine:
+    """Facade: schedule + serve a request set on the JAX backend.
+
+    Thin wiring only — the run loop is core/serving_loop.ServingLoop in
+    ``disagg`` topology (prefill chunks interleave with slot decode)."""
+
+    def __init__(self, cfg: ModelConfig, params, scheduler, *,
+                 max_slots: int = 8, cache_len: Optional[int] = None,
+                 moe_impl: str = "local", time_scale: float = 1.0,
+                 chunk_tokens: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.sched = scheduler
+        self.backend = JaxEngineBackend(
+            cfg, params, max_slots=max_slots, cache_len=cache_len,
+            moe_impl=moe_impl, time_scale=time_scale,
+            chunk_tokens=chunk_tokens)
+        self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
+            mode="disagg", decode_slot_cap=max_slots))
+        self.result: Optional[ServeResult] = None
+
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        return self.backend.outputs
+
+    @property
+    def n_prefill_shapes(self) -> int:
+        return self.backend.n_prefill_shapes
+
+    @property
+    def interleaved_decode_steps(self) -> int:
+        return self.result.interleaved_decode_steps if self.result else 0
+
+    def submit(self, requests: List[Request]) -> None:
+        self._pending = list(requests)
+
+    def run(self, max_wall_s: float = 600.0) -> List[Request]:
+        self.result = self.loop.run(self._pending, time_limit=math.inf,
+                                    max_wall_s=max_wall_s)
+        return [r for r in self._pending
+                if r.finished >= 0 and not r.dropped]

@@ -44,6 +44,13 @@ class GlobalMonitor:
         self.seq_lens.append(seq_len)
         self.queue_len += 1
 
+    def on_requeue(self) -> None:
+        """Re-admission of an already-counted request (OOM eviction,
+        slot-capacity clamp).  Restores queue occupancy WITHOUT touching
+        the arrival-rate window or the sequence-length stats — those
+        describe the client workload, which did not change."""
+        self.queue_len += 1
+
     def on_batch(self, latency_s: float) -> None:
         self.batch_lat.append(latency_s)
 

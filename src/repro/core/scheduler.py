@@ -1,13 +1,13 @@
 """P/D scheduler: bucket-aware prefill batching + continuous-batching
 decode, with prefill->decode KV transfer (paper §III "P/D Scheduler").
 
-The scheduler is pure policy — no clocks, no devices.  Both the
-discrete-event simulator (core/simulator.py) and the real JAX engine
-(core/engine.py) drive it:
+The scheduler is pure policy — no clocks, no devices.  The unified
+ServingLoop (core/serving_loop.py) drives it against either execution
+backend (cost model or real JAX engine):
 
-    on_arrival(req, now)           assign to bucket (Algorithm 1 insert)
-    next_prefill_batch(now, ...)   adjust buckets, pick bucket, form batch
-    (decode admission is slot-based continuous batching in the consumer)
+    on_arrival(req, now[, requeue])  assign to bucket (Algorithm 1 insert)
+    next_prefill_batch(now, ...)     adjust buckets, pick bucket, form batch
+    (decode admission is slot-based continuous batching in the loop)
 
 Bucket choice: ONLINE requests first (bucket holding the earliest-arrived
 online request — paper: "online tasks prioritize buckets based on
@@ -17,7 +17,7 @@ configured within-bucket policy (SJF for RPS, LJF for token throughput).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 from repro.models.config import ModelConfig
 from .batcher import DynamicBatchController, FormedBatch, MemoryBudget
@@ -39,29 +39,89 @@ class SchedulerConfig:
     kv_transfer_bw: float = 50e9         # ICI per link (TPU adaptation)
 
 
-class BucketServeScheduler:
+class SchedulerBase:
+    """Loop-facing scheduler surface (DESIGN.md §2): everything the
+    ServingLoop drives — arrival/requeue bookkeeping, decode-pool
+    accounting, OOM retry backoff — lives here ONCE; policies supply the
+    queue structure (``_enqueue``/``queued``) and batch formation
+    (``next_prefill_batch``).  Pure policy: no clocks, no devices."""
+
+    name = "base"
+
+    def __init__(self, cfg: ModelConfig, budget: MemoryBudget, *,
+                 memory_model: str = "sum", max_batch: int = 512,
+                 decode_reserve: float = 0.5):
+        self.cfg = cfg
+        self.batcher = DynamicBatchController(
+            cfg, budget, memory_model=memory_model, max_batch=max_batch,
+            decode_reserve=decode_reserve)
+        self.monitor = GlobalMonitor()
+        self.monitor.kv_budget_tokens = self.batcher.token_budget()
+
+    # ------------------------------------------------------------ events --
+    def _enqueue(self, req: Request) -> None:
+        raise NotImplementedError
+
+    def queued(self) -> int:
+        raise NotImplementedError
+
+    def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
+        raise NotImplementedError
+
+    def on_arrival(self, req: Request, now: float,
+                   requeue: bool = False) -> None:
+        """Queue a request.  ``requeue=True`` marks a re-admission (OOM
+        eviction, slot clamp): the request re-enters the queue but the
+        monitor's arrival-rate / seq-len workload stats are NOT
+        re-counted."""
+        self._enqueue(req)
+        if requeue:
+            self.monitor.on_requeue()
+        else:
+            self.monitor.on_arrival(now, req.prompt_len)
+
+    # ----------------------------------------------------- OOM backoff ----
+    def notify_oom(self) -> None:
+        """Retry backoff every real system has: shrink the admission cap."""
+        self._oom_shrink = max(0.4, getattr(self, "_oom_shrink", 1.0) * 0.85)
+
+    def _cap_scale(self) -> float:
+        s = getattr(self, "_oom_shrink", 1.0)
+        self._oom_shrink = min(1.0, s * 1.02)      # slow recovery
+        return s
+
+    # -------------------------------------------------- decode admission --
+    def _live_tokens(self, req: Request) -> int:
+        return req.prompt_len + req.max_new_tokens
+
+    def admit_decode(self, req: Request) -> None:
+        self.monitor.decode_pool += 1
+        self.monitor.in_flight_tokens += self._live_tokens(req)
+
+    def release_decode(self, req: Request) -> None:
+        self.monitor.decode_pool -= 1
+        self.monitor.in_flight_tokens -= self._live_tokens(req)
+
+
+class BucketServeScheduler(SchedulerBase):
     """The paper's middleware: Bucketing Manager + Batching Controller."""
 
     name = "bucketserve"
 
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget,
                  sched: SchedulerConfig = SchedulerConfig()):
-        self.cfg = cfg
+        super().__init__(cfg, budget, memory_model=sched.memory_model,
+                         max_batch=sched.max_batch,
+                         decode_reserve=sched.decode_reserve)
         self.sched = sched
         self.buckets = BucketManager(
             l_max=cfg.max_seq_len, theta=sched.theta,
             assignment=sched.assignment, refine=sched.refine,
             trigger=sched.trigger)
-        self.batcher = DynamicBatchController(
-            cfg, budget, memory_model=sched.memory_model,
-            max_batch=sched.max_batch, decode_reserve=sched.decode_reserve)
-        self.monitor = GlobalMonitor()
-        self.monitor.kv_budget_tokens = self.batcher.token_budget()
 
     # ------------------------------------------------------------ events --
-    def on_arrival(self, req: Request, now: float) -> None:
-        self.buckets.add(req)
-        self.monitor.on_arrival(now, req.prompt_len)
+    def _enqueue(self, req: Request) -> None:
+        self.buckets.add(req)            # Algorithm 1 insert
 
     def queued(self) -> int:
         return self.buckets.total()
@@ -106,14 +166,6 @@ class BucketServeScheduler:
         return batch
 
     # -------------------------------------------------- decode admission --
-    def admit_decode(self, req: Request) -> None:
-        self.monitor.decode_pool += 1
-        self.monitor.in_flight_tokens += self._live_tokens(req)
-
-    def release_decode(self, req: Request) -> None:
-        self.monitor.decode_pool -= 1
-        self.monitor.in_flight_tokens -= self._live_tokens(req)
-
     def _live_tokens(self, req: Request) -> int:
         tokens = req.prompt_len + req.max_new_tokens
         win = self.cfg.sliding_window or (

@@ -1,0 +1,622 @@
+"""Event-driven serving loop — ONE orchestrator for every substrate.
+
+Historically the repo had two divergent run loops: three hand-rolled
+mode loops in ``core/simulator.py`` and a synchronous coupled loop in
+``core/engine.py``.  This module extracts the shared orchestration —
+arrivals, scheduler ticks, prefill dispatch (optionally in chunks),
+KV-transfer/join, decode-pool admission, OOM handling/re-queue, and
+per-request timing — into a single :class:`ServingLoop` that drives any
+object implementing the :class:`ExecutionBackend` protocol
+(DESIGN.md §2).
+
+Backends plug in the substrate:
+
+* ``CostModelBackend`` (core/simulator.py) — analytic A100/TPU cost
+  model on a :class:`VirtualClock`; paper-scale discrete-event runs.
+* ``JaxEngineBackend`` (core/engine.py)    — real jitted prefill/decode
+  on a :class:`WallClock`; tiny-model CPU/TPU runs, token for token.
+
+Execution topology is loop *configuration*, not loop code:
+
+* ``disagg``  — separate prefill/decode executors + KV transfer
+  (BucketServe, DistServe).  The real engine also runs this topology:
+  chunked prefill interleaves decode iterations between prompt chunks,
+  so decode never stalls behind a long prefill.
+* ``coupled`` — one executor; each iteration fuses the new prefill
+  batch with one decode step over the live pool (Orca-style
+  iteration-level scheduling; prefill inflates every concurrent TPOT).
+* ``static``  — one executor; a formed batch runs prefill + ALL decode
+  steps to completion before the next batch starts, every iteration
+  reading the PADDED batch context (paper Fig. 3b waste).
+
+OOM semantics: admitting more live KV tokens than the backend budget
+triggers an OOM event — the offending batch is evicted and re-queued
+(``requeue=True``: workload stats are not double-counted) after a
+restart penalty.  BucketServe's Eq. (5)/(6) safety avoids these by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+from .batcher import FormedBatch
+from .request import Request
+
+
+# -------------------------------------------------------------- clocks ----
+class Clock(Protocol):
+    """Minimal clock the loop schedules against.  ``virtual`` clocks jump
+    between events (discrete-event time); wall clocks sleep."""
+
+    virtual: bool
+
+    def now(self) -> float: ...
+
+    def advance(self, to: float) -> None: ...
+
+
+class VirtualClock:
+    """Discrete-event time: ``advance`` jumps straight to the event."""
+
+    virtual = True
+
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, to: float) -> None:
+        self.t = max(self.t, to)
+
+
+class WallClock:
+    """Scaled wall time: ``time_scale`` virtual seconds per wall second.
+    ``advance`` sleeps (capped at 1 ms so arrivals stay responsive)."""
+
+    virtual = False
+
+    def __init__(self, time_scale: float = 1.0) -> None:
+        self.time_scale = time_scale
+        self._t0 = time.perf_counter()
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def now(self) -> float:
+        return (time.perf_counter() - self._t0) * self.time_scale
+
+    def advance(self, to: float) -> None:
+        dt = (to - self.now()) / self.time_scale
+        if dt > 0:
+            time.sleep(min(dt, 0.001))
+
+    def wall_elapsed(self) -> float:
+        return time.perf_counter() - self._t0
+
+
+# ---------------------------------------------------------------- jobs ----
+def plan_chunks(total: int, chunk: Optional[int]) -> List[Tuple[int, int]]:
+    """Split ``total`` padded prompt tokens into (start, length) spans.
+    ``chunk`` of None/<=0/>=total means whole-prompt (one span).  Shared
+    by every backend so the span math cannot drift between substrates."""
+    if not chunk or chunk <= 0 or chunk >= total:
+        return [(0, total)]
+    return [(s, min(chunk, total - s)) for s in range(0, total, chunk)]
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    """A formed batch scheduled onto the prefill executor, split into
+    token-span chunks.  Un-chunked execution is the 1-chunk case."""
+
+    batch: FormedBatch
+    chunks: List[Tuple[int, int]]            # (start, length) token spans
+    next_chunk: int = 0
+    started_at: float = -1.0
+    handle: object = None                    # backend-private chunk state
+
+    @property
+    def done(self) -> bool:
+        return self.next_chunk >= len(self.chunks)
+
+
+# ------------------------------------------------------------- protocol ---
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """What a substrate must provide to be driven by the ServingLoop.
+
+    The backend owns *execution* (device state, cost math) and its own
+    notion of time; the loop owns *orchestration* (queues, admission,
+    OOM policy, timing bookkeeping).  Durations are in the clock's
+    (virtual) seconds.  On a wall clock the calls block for real and the
+    returned duration is ignored — the loop reads the clock instead.
+    """
+
+    clock: Clock
+    flops_per_token: float        # model FLOPs per processed token (2·P)
+    prefill_needs_slots: bool     # True: a batch needs free decode slots
+    supports_decode: bool         # False: requests finish at first token
+
+    def begin(self, requests: Sequence[Request]) -> None:
+        """Reset per-run state (token materialization, clock start)."""
+
+    def kv_budget_tokens(self) -> float:
+        """Live-token budget for OOM admission (inf = substrate-managed)."""
+
+    def free_slots(self) -> int:
+        """Free decode slots (only consulted when prefill_needs_slots)."""
+
+    def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
+        """Split a batch's padded prompt into (start, length) spans."""
+
+    def prefill_chunk(self, job: PrefillJob, idx: int) -> float:
+        """Execute chunk ``idx`` of ``job``; return its duration."""
+
+    def transfer_seconds(self, batch: FormedBatch) -> float:
+        """Prefill->decode KV transfer time for the whole batch."""
+
+    def decode_iter(self, pool: Sequence[Request],
+                    context_tokens: int) -> float:
+        """One decode iteration over the pool (one token per request);
+        return its duration.  ``context_tokens`` is the KV volume the
+        loop's mode says this iteration reads (exact live tokens, or the
+        padded batch context in ``static`` mode)."""
+
+    def release(self, req: Request) -> None:
+        """A pooled request finished: free its slot/state."""
+
+
+# -------------------------------------------------------------- results ---
+@dataclasses.dataclass
+class ServeResult:
+    """Per-run outcome + executor accounting (works for both virtual and
+    wall backends; ``makespan`` is in the backend clock's seconds)."""
+
+    requests: List[Request]
+    makespan: float
+    busy_prefill: float
+    busy_decode: float
+    useful_flops: float
+    padded_flops: float
+    oom_events: int
+    bucketing_overhead_s: float
+    prefill_time_total: float = 0.0
+    decode_time_total: float = 0.0
+    transfer_time_total: float = 0.0
+    interleaved_decode_steps: int = 0    # decode iters run mid-prefill-job
+
+    def finished(self):
+        return [r for r in self.requests if r.finished >= 0]
+
+    def throughput_tok_s(self) -> float:
+        toks = sum(r.generated + r.prompt_len for r in self.finished())
+        return toks / max(self.makespan, 1e-9)
+
+    def output_tok_s(self) -> float:
+        return sum(r.generated for r in self.finished()) / max(self.makespan,
+                                                               1e-9)
+
+    def server_rps(self) -> float:
+        return len(self.finished()) / max(self.makespan, 1e-9)
+
+    def slo_attainment(self) -> float:
+        if not self.requests:
+            return 0.0
+        return sum(r.slo_met() for r in self.requests) / len(self.requests)
+
+    def utilization(self, hw) -> float:
+        """Model-FLOPs utilization over the busy window (the cost model's
+        analogue of the paper's GPU-utilization metric)."""
+        chips = hw.prefill_chips + hw.decode_chips
+        return self.useful_flops / max(
+            chips * hw.peak_flops * self.makespan, 1e-9)
+
+    def padding_efficiency(self) -> float:
+        return self.useful_flops / max(self.padded_flops, 1e-9)
+
+    def busy_utilization(self, n_executors: int = 2) -> float:
+        """Fraction of executor-time busy — the closest analogue of the
+        paper's 'average GPU utilization' (Fig. 5b)."""
+        return min(1.0, (self.busy_prefill + self.busy_decode)
+                   / max(n_executors * self.makespan, 1e-9))
+
+
+@dataclasses.dataclass
+class _LoopState:
+    kv_budget: float
+    ai: int = 0
+    done: int = 0
+    busy_p: float = 0.0
+    busy_d: float = 0.0
+    useful: float = 0.0
+    padded: float = 0.0
+    oom: int = 0
+    t_pre: float = 0.0
+    t_dec: float = 0.0
+    t_xfer: float = 0.0
+    interleaved: int = 0
+
+
+# ---------------------------------------------------------------- config --
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    mode: str = "disagg"              # disagg | coupled | static
+    decode_slot_cap: int = 256
+    restart_penalty: float = 0.5
+    tick: float = 0.005
+
+
+# ------------------------------------------------------------------ loop --
+class ServingLoop:
+    """Drives a scheduler policy against an :class:`ExecutionBackend`."""
+
+    def __init__(self, scheduler, backend: ExecutionBackend,
+                 config: LoopConfig = LoopConfig()):
+        assert config.mode in ("disagg", "coupled", "static"), config.mode
+        self.sched = scheduler
+        self.backend = backend
+        self.cfg = config
+
+    # ------------------------------------------------------------- run ----
+    def run(self, requests: List[Request], time_limit: float = 3600.0,
+            max_wall_s: Optional[float] = None) -> ServeResult:
+        self._arrivals = sorted(requests, key=lambda r: r.arrival)
+        self._n = len(requests)
+        self._max_wall_s = max_wall_s
+        self.pool: List[Request] = []
+        self.pending_join: List[list] = []       # [ready_time, request]
+        self.job: Optional[PrefillJob] = None
+        self.st = _LoopState(kv_budget=self.backend.kv_budget_tokens())
+        self.backend.begin(requests)
+        if self.cfg.mode == "disagg":
+            self._run_overlapped(time_limit)
+        else:
+            self._run_fused(time_limit, static=self.cfg.mode == "static")
+        st = self.st
+        overhead = getattr(getattr(self.sched, "buckets", None),
+                           "overhead_s", 0.0)
+        return ServeResult(
+            requests=requests, makespan=self.backend.clock.now(),
+            busy_prefill=st.busy_p, busy_decode=st.busy_d,
+            useful_flops=st.useful, padded_flops=st.padded,
+            oom_events=st.oom, bucketing_overhead_s=overhead,
+            prefill_time_total=st.t_pre, decode_time_total=st.t_dec,
+            transfer_time_total=st.t_xfer,
+            interleaved_decode_steps=st.interleaved)
+
+    # ------------------------------------------------------------ shared --
+    def _wall_exceeded(self) -> bool:
+        return (self._max_wall_s is not None
+                and not self.backend.clock.virtual
+                and self.backend.clock.wall_elapsed() > self._max_wall_s)
+
+    def _after(self, start: float, duration: float) -> float:
+        """Completion time of a backend call dispatched at ``start``: in
+        virtual time the event is scheduled; in wall time it already
+        happened — read the clock."""
+        if self.backend.clock.virtual:
+            return start + duration
+        return self.backend.clock.now()
+
+    def _admit_arrivals(self, now: float) -> None:
+        st = self.st
+        while st.ai < self._n and self._arrivals[st.ai].arrival <= now:
+            r = self._arrivals[st.ai]
+            self.sched.on_arrival(r, r.arrival if
+                                  self.backend.clock.virtual else now)
+            st.ai += 1
+
+    def _process_joins(self, now: float) -> None:
+        for item in list(self.pending_join):
+            if item[0] <= now and len(self.pool) < self.cfg.decode_slot_cap:
+                self.pool.append(item[1])
+                self.pending_join.remove(item)
+
+    @staticmethod
+    def _live_tokens(pool: Sequence[Request]) -> int:
+        return sum(r.prompt_len + r.generated for r in pool)
+
+    def _handle_oom(self, batch: FormedBatch, now: float) -> None:
+        """Evict + re-queue; oversized singletons are dropped (unservable);
+        the scheduler's retry backoff (notify_oom) shrinks its next cap.
+        Re-queues use ``requeue=True`` so arrival stats are not
+        double-counted."""
+        if hasattr(self.sched, "notify_oom"):
+            self.sched.notify_oom()
+        for r in batch.requests:
+            if r.prompt_len + r.max_new_tokens > self.st.kv_budget:
+                r.dropped = True
+                r.finished = -1.0
+                self.st.done += 1
+                continue
+            r.arrival = now + self.cfg.restart_penalty
+            self.sched.on_arrival(r, r.arrival, requeue=True)
+
+    def _form_batch(self, now: float, *,
+                    count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
+        """One scheduler tick -> (batch, oomed).  Applies the backend KV
+        budget (virtual substrates) and the decode-slot clamp (real
+        substrates, excess re-queued without stat double-counting)."""
+        st = self.st
+        if self.backend.prefill_needs_slots and self.backend.free_slots() <= 0:
+            return None, False
+        batch = self.sched.next_prefill_batch(now)
+        if batch is None:
+            return None, False
+        if self.backend.prefill_needs_slots:
+            free = self.backend.free_slots()
+            if batch.size > free:                    # slot-capacity clamp
+                for r in batch.requests[free:]:
+                    self.sched.on_arrival(r, now, requeue=True)
+                batch = FormedBatch(batch.requests[:free], batch.pad_to,
+                                    bucket=batch.bucket)
+        if math.isfinite(st.kv_budget):
+            batch_tokens = sum(r.prompt_len + r.max_new_tokens
+                               for r in batch.requests)
+            pending_tokens = sum(it[1].prompt_len + it[1].max_new_tokens
+                                 for it in self.pending_join) \
+                if count_pending else 0
+            if (self._live_tokens(self.pool) + pending_tokens
+                    + batch_tokens > st.kv_budget):
+                st.oom += 1
+                self._handle_oom(batch, now)
+                return None, True
+        return batch, False
+
+    def _account_prefill_batch(self, batch: FormedBatch) -> None:
+        fpt = self.backend.flops_per_token
+        self.st.useful += fpt * batch.total_tokens
+        self.st.padded += fpt * batch.padded_tokens
+
+    def _advance_pool(self, end: float) -> None:
+        """One token for every pooled request; retire finished ones."""
+        for r in list(self.pool):
+            r.generated += 1
+            if r.generated >= r.max_new_tokens:
+                r.finished = end
+                self.st.done += 1
+                self.pool.remove(r)
+                self.backend.release(r)
+                self.sched.release_decode(r)
+
+    def _next_arrival(self) -> Optional[float]:
+        if self.st.ai < self._n:
+            return self._arrivals[self.st.ai].arrival
+        return None
+
+    # -------------------------------------------- disagg (overlapped) -----
+    def _run_overlapped(self, time_limit: float) -> None:
+        """Separate prefill/decode executors (+ KV transfer between).  On
+        a wall clock the two 'executors' are the same synchronous device
+        stream — chunked prefill is what lets decode interleave."""
+        clock, st, sched = self.backend.clock, self.st, self.sched
+        prefill_free = decode_free = 0.0
+
+        while st.done < self._n and clock.now() < time_limit:
+            if self._wall_exceeded():
+                break
+            now = clock.now()
+            self._admit_arrivals(now)
+            self._process_joins(now)
+
+            progressed = False
+            # ---------------------------------------- prefill executor ----
+            if prefill_free <= now:
+                if self.job is None and sched.queued():
+                    batch, oomed = self._form_batch(now, count_pending=True)
+                    if oomed:
+                        prefill_free = now + self.cfg.restart_penalty
+                    elif batch is not None:
+                        self.job = PrefillJob(
+                            batch, self.backend.chunk_plan(batch))
+                if self.job is not None:
+                    end = self._run_chunk(self.job, now)
+                    prefill_free = end
+                    progressed = True
+            # ----------------------------------------- decode executor ----
+            if decode_free <= now and self.pool:
+                decode_free = self._run_decode_iter(now)
+                progressed = True
+
+            if not progressed:
+                cands = [c for c in
+                         [prefill_free if sched.queued() or self.job
+                          else None,
+                          decode_free if self.pool else None,
+                          self._next_arrival()]
+                         + [it[0] for it in self.pending_join]
+                         if c is not None and c > now]
+                if cands:
+                    clock.advance(min(cands))
+                elif clock.virtual:
+                    clock.advance(now + self.cfg.tick)
+                elif (not sched.queued() and not self.pool
+                      and not self.pending_join and self.job is None
+                      and self._next_arrival() is None):
+                    break                      # drained: nothing can progress
+                else:
+                    clock.advance(now + self.cfg.tick)
+
+    def _run_chunk(self, job: PrefillJob, now: float) -> float:
+        """Execute the job's next prefill chunk; on the last chunk stamp
+        first-token times and hand requests to transfer/decode."""
+        st, sched, batch = self.st, self.sched, job.batch
+        if job.started_at < 0:
+            job.started_at = now
+            for r in batch.requests:
+                r.prefill_start = now
+        idx = job.next_chunk
+        dur = self.backend.prefill_chunk(job, idx)
+        job.next_chunk += 1
+        end = self._after(now, dur)
+        dur = dur if self.backend.clock.virtual else end - now
+        st.busy_p += dur
+        st.t_pre += dur * batch.size
+
+        if job.done:
+            self._account_prefill_batch(batch)
+            xfer = self.backend.transfer_seconds(batch)
+            for r in batch.requests:
+                r.first_token = end
+                r.generated = 1
+                if r.generated >= r.max_new_tokens \
+                        or not self.backend.supports_decode:
+                    r.finished = end
+                    st.done += 1
+                else:
+                    # KV allocated AT PREFILL: account it now so the
+                    # batcher's Eq. (6) sees in-transfer caches too
+                    # (prevents admission overshoot).
+                    sched.admit_decode(r)
+                    self.pending_join.append([end + xfer, r])
+            st.t_xfer += xfer * batch.size
+            self.job = None
+            # zero-latency transfers (real engine) join before the next
+            # decode dispatch — the substrate already holds their slots
+            self._process_joins(self.backend.clock.now())
+        return end
+
+    def _run_decode_iter(self, now: float) -> float:
+        st = self.st
+        n = len(self.pool)
+        dur = self.backend.decode_iter(self.pool, self._live_tokens(self.pool))
+        end = self._after(now, dur)
+        dur = dur if self.backend.clock.virtual else end - now
+        st.busy_d += dur
+        st.t_dec += dur * n
+        fpt = self.backend.flops_per_token
+        st.useful += fpt * n
+        st.padded += fpt * n
+        if self.job is not None:
+            st.interleaved += 1       # decode ran between prefill chunks
+        self._advance_pool(end)
+        return end
+
+    # --------------------------------------- coupled / static (fused) -----
+    def _run_fused(self, time_limit: float, static: bool) -> None:
+        """Single executor.  ``coupled``: each iteration fuses the new
+        prefill batch (if any) with one decode step over the live pool
+        (Orca).  ``static``: a formed batch runs prefill + decode TO
+        COMPLETION with padded context reads (convoy effect)."""
+        clock, st, sched = self.backend.clock, self.st, self.sched
+        cooldown = 0.0
+
+        while st.done < self._n and clock.now() < time_limit:
+            if self._wall_exceeded():
+                break
+            now = clock.now()
+            self._admit_arrivals(now)
+
+            batch = None
+            can_admit = ((not static) or not self.pool) and now >= cooldown
+            if sched.queued() and can_admit and \
+                    len(self.pool) < self.cfg.decode_slot_cap:
+                batch, oomed = self._form_batch(now, count_pending=False)
+                if oomed:
+                    cooldown = now + self.cfg.restart_penalty
+
+            if static:
+                if batch is not None:
+                    self._run_batch_to_completion(batch, now)
+                else:
+                    cands = [c for c in [self._next_arrival()]
+                             if c is not None and c > now]
+                    if sched.queued():
+                        cands.append(now + self.cfg.tick)
+                    clock.advance(min(cands) if cands else now
+                                  + self.cfg.tick)
+                continue
+
+            if batch is None and not self.pool:
+                cands = [c for c in [self._next_arrival()]
+                         if c is not None and c > now]
+                clock.advance(min(cands) if cands else now + self.cfg.tick)
+                continue
+
+            # one fused iteration: prefill the new batch + one decode step
+            dt = 0.0
+            if batch is not None:
+                job = PrefillJob(batch, [(0, batch.pad_to)])
+                pdt = self.backend.prefill_chunk(job, 0)
+                job.next_chunk = 1
+                dt += pdt
+            n_pool = len(self.pool)
+            if n_pool:
+                ddt = self.backend.decode_iter(
+                    self.pool, self._live_tokens(self.pool))
+                dt += ddt
+            end = now + dt if clock.virtual else clock.now()
+            if batch is not None:
+                for r in batch.requests:
+                    r.prefill_start = now
+                    r.first_token = end          # interference: full iter
+                    r.generated = 1
+                st.busy_p += pdt
+                st.t_pre += pdt * batch.size
+                self._account_prefill_batch(batch)
+            if n_pool:
+                st.busy_d += ddt
+                st.t_dec += ddt * n_pool
+                fpt = self.backend.flops_per_token
+                st.useful += fpt * n_pool
+                st.padded += fpt * n_pool
+                self._advance_pool(end)
+            if batch is not None:
+                for r in batch.requests:
+                    if r.generated >= r.max_new_tokens \
+                            or not self.backend.supports_decode:
+                        r.finished = end
+                        st.done += 1
+                        self.backend.release(r)
+                    else:
+                        self.pool.append(r)
+                        sched.admit_decode(r)
+            clock.advance(end)
+
+    def _run_batch_to_completion(self, batch: FormedBatch,
+                                 now: float) -> None:
+        """Static/batch-granularity execution with padded decode reads:
+        every iteration reads the PADDED batch context (all slots padded
+        to the batch max) and the executor is held until the longest
+        member finishes."""
+        st, sched, clock = self.st, self.sched, self.backend.clock
+        n, pad = batch.size, batch.pad_to
+        fpt = self.backend.flops_per_token
+        job = PrefillJob(batch, [(0, pad)])
+        pdt = self.backend.prefill_chunk(job, 0)
+        job.next_chunk = 1
+        st.busy_p += pdt
+        st.t_pre += pdt * n
+        self._account_prefill_batch(batch)
+        t = self._after(now, pdt)
+        for r in batch.requests:
+            r.prefill_start = now
+            r.first_token = t
+            r.generated = 1
+            sched.admit_decode(r)
+        iters = max(r.max_new_tokens for r in batch.requests) - 1
+        for i in range(1, iters + 1):
+            context = n * (pad + i)              # PADDED batch KV read
+            ddt = self.backend.decode_iter(batch.requests, context)
+            t = self._after(t, ddt)
+            st.busy_d += ddt
+            st.t_dec += ddt * n
+            st.useful += fpt * sum(
+                1 for r in batch.requests if r.generated < r.max_new_tokens)
+            st.padded += fpt * n
+            for r in batch.requests:
+                if r.generated < r.max_new_tokens:
+                    r.generated += 1
+                    if r.generated >= r.max_new_tokens:
+                        r.finished = t
+        for r in batch.requests:
+            if r.finished < 0:
+                r.finished = t
+            st.done += 1
+            sched.release_decode(r)
+            self.backend.release(r)
+        clock.advance(t)

@@ -1,9 +1,15 @@
-"""Discrete-event simulator: paper-scale end-to-end serving experiments.
+"""Analytic cost-model backend: paper-scale end-to-end serving runs.
 
 The container is CPU-only, so the paper's 4×A100 experiments (Fig. 5/6)
 are reproduced on an analytic cost model; the same scheduler objects also
 drive the *real* JAX engine (core/engine.py) at tiny-model scale, which
 is how the cost model's scheduling behaviour is validated.
+
+All orchestration lives in core/serving_loop.py — this module only
+prices the substrate: :class:`CostModelBackend` implements the
+``ExecutionBackend`` protocol on a :class:`VirtualClock`, and
+:class:`Simulator` is a thin facade wiring (scheduler, cost model,
+execution mode) into a :class:`ServingLoop`.
 
 Cost model:
   prefill (compute-bound):  t = FLOPs(padded tokens) / (chips·peak·MFU)
@@ -19,12 +25,17 @@ BucketServe's Eq. (5)/(6) memory safety avoids these by construction.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import List, Optional
+from typing import List, Optional, Sequence, Tuple
 
 from repro.models.config import ModelConfig
-from .batcher import FormedBatch, MemoryBudget
-from .request import Request, TaskType
+from .batcher import FormedBatch
+from .request import Request
+from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
+                           VirtualClock, plan_chunks)
+
+# Back-compat alias: benchmark/analysis code predating the unified loop
+# imports the result type under its simulator-era name.
+SimResult = ServeResult
 
 
 # ------------------------------------------------------------- hardware ---
@@ -74,6 +85,15 @@ class CostModel:
         chips = self.hw.prefill_chips
         return flops / (chips * self.hw.peak_flops * self.hw.mfu)
 
+    def prefill_chunk_seconds(self, n: int, start: int, length: int) -> float:
+        """One chunked-prefill step: linear FLOPs for the chunk's tokens
+        plus the *incremental* quadratic attention cost of extending each
+        sequence from ``start`` to ``start+length`` context."""
+        flops = 2.0 * self.p_active * n * length + n * (
+            self._attn_flops(start + length) - self._attn_flops(start))
+        chips = self.hw.prefill_chips
+        return flops / (chips * self.hw.peak_flops * self.hw.mfu)
+
     def decode_iter_seconds(self, context_tokens: int, pool: int) -> float:
         """One iteration over the decode pool (one token each).
         `context_tokens`: KV tokens actually READ this iteration — exact
@@ -99,59 +119,65 @@ class CostModel:
         return max(0.0, (1 - reserve) * remain) / self.kv_per_tok
 
 
-# ------------------------------------------------------------- results ----
-@dataclasses.dataclass
-class SimResult:
-    requests: List[Request]
-    makespan: float
-    busy_prefill: float
-    busy_decode: float
-    useful_flops: float
-    padded_flops: float
-    oom_events: int
-    bucketing_overhead_s: float
-    prefill_time_total: float = 0.0
-    decode_time_total: float = 0.0
-    transfer_time_total: float = 0.0
+# -------------------------------------------------------------- backend ---
+class CostModelBackend:
+    """ExecutionBackend over the analytic cost model (virtual time).
 
-    def finished(self):
-        return [r for r in self.requests if r.finished >= 0]
+    ``prefill_chunk``/``decode_iter`` price work instead of running it —
+    the ServingLoop advances request state itself.  ``chunk_tokens``
+    enables chunked prefill in the cost model too (incremental quadratic
+    attention per chunk); default is whole-prompt prefill, matching the
+    paper's setup.
+    """
 
-    def throughput_tok_s(self) -> float:
-        toks = sum(r.generated + r.prompt_len for r in self.finished())
-        return toks / max(self.makespan, 1e-9)
+    prefill_needs_slots = False
+    supports_decode = True
 
-    def output_tok_s(self) -> float:
-        return sum(r.generated for r in self.finished()) / max(self.makespan, 1e-9)
+    def __init__(self, cost: CostModel, *, kv_budget: float,
+                 chunk_tokens: Optional[int] = None):
+        self.cost = cost
+        self.clock = VirtualClock()
+        self._kv_budget = kv_budget
+        self.chunk_tokens = chunk_tokens
+        self.flops_per_token = 2.0 * cost.p_active
 
-    def server_rps(self) -> float:
-        return len(self.finished()) / max(self.makespan, 1e-9)
+    def begin(self, requests: Sequence[Request]) -> None:
+        self.clock = VirtualClock()
 
-    def slo_attainment(self) -> float:
-        if not self.requests:
-            return 0.0
-        return sum(r.slo_met() for r in self.requests) / len(self.requests)
+    def kv_budget_tokens(self) -> float:
+        return self._kv_budget
 
-    def utilization(self, hw: HardwareSpec) -> float:
-        """Model-FLOPs utilization over the busy window (the simulator's
-        analogue of the paper's GPU-utilization metric)."""
-        chips = hw.prefill_chips + hw.decode_chips
-        return self.useful_flops / max(
-            chips * hw.peak_flops * self.makespan, 1e-9)
+    def free_slots(self) -> int:          # pragma: no cover - not consulted
+        return 1 << 30
 
-    def padding_efficiency(self) -> float:
-        return self.useful_flops / max(self.padded_flops, 1e-9)
+    def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
+        # same gate as the real engine (cfg.chunkable_prefill) so the two
+        # backends schedule identically for ring-cache/VLM configs
+        c = self.chunk_tokens if self.cost.cfg.chunkable_prefill else None
+        return plan_chunks(batch.pad_to, c)
 
-    def busy_utilization(self, n_executors: int = 2) -> float:
-        """Fraction of executor-time busy — the closest analogue of the
-        paper's 'average GPU utilization' (Fig. 5b)."""
-        return min(1.0, (self.busy_prefill + self.busy_decode)
-                   / max(n_executors * self.makespan, 1e-9))
+    def prefill_chunk(self, job: PrefillJob, idx: int) -> float:
+        start, length = job.chunks[idx]
+        if len(job.chunks) == 1:
+            return self.cost.prefill_seconds(job.batch.size, length)
+        return self.cost.prefill_chunk_seconds(job.batch.size, start, length)
+
+    def transfer_seconds(self, batch: FormedBatch) -> float:
+        return self.cost.transfer_seconds(batch.total_tokens)
+
+    def decode_iter(self, pool: Sequence[Request],
+                    context_tokens: int) -> float:
+        return self.cost.decode_iter_seconds(context_tokens, len(pool))
+
+    def release(self, req: Request) -> None:
+        pass
 
 
 # ------------------------------------------------------------ simulator ---
 class Simulator:
-    """P/D serving simulation in one of three execution modes:
+    """Facade: (scheduler, cost model, mode) -> configured ServingLoop.
+
+    Execution modes (loop topology, see serving_loop.ServingLoop):
 
     * ``disagg``  — separate prefill/decode executors + KV transfer
       (BucketServe, DistServe).
@@ -165,283 +191,20 @@ class Simulator:
 
     def __init__(self, scheduler, cost: CostModel, *, mode: str = "disagg",
                  decode_slot_cap: int = 256, restart_penalty: float = 0.5,
-                 tick: float = 0.005):
+                 tick: float = 0.005, chunk_tokens: Optional[int] = None):
         assert mode in ("disagg", "coupled", "static")
         self.sched = scheduler
         self.cost = cost
         self.mode = mode
-        self.decode_slot_cap = decode_slot_cap
-        self.restart_penalty = restart_penalty
-        self.tick = tick
+        chips = cost.hw.decode_chips if mode == "disagg" \
+            else cost.hw.decode_chips + cost.hw.prefill_chips
+        self.backend = CostModelBackend(
+            cost, kv_budget=cost.kv_budget_tokens(chips),
+            chunk_tokens=chunk_tokens)
+        self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
+            mode=mode, decode_slot_cap=decode_slot_cap,
+            restart_penalty=restart_penalty, tick=tick))
 
-    # ------------------------------------------------------------------
     def run(self, requests: List[Request],
             time_limit: float = 3600.0) -> SimResult:
-        cost, sched = self.cost, self.sched
-        arrivals = sorted(requests, key=lambda r: r.arrival)
-        self._n = len(requests)
-        st = _SimState(kv_budget=cost.kv_budget_tokens(
-            cost.hw.decode_chips if self.mode == "disagg"
-            else cost.hw.decode_chips + cost.hw.prefill_chips))
-        if self.mode == "disagg":
-            self._run_disagg(arrivals, st, time_limit)
-        else:
-            self._run_coupled(arrivals, st, time_limit)
-        overhead = getattr(getattr(sched, "buckets", None), "overhead_s", 0.0)
-        return SimResult(requests=requests, makespan=st.now,
-                         busy_prefill=st.busy_p, busy_decode=st.busy_d,
-                         useful_flops=st.useful, padded_flops=st.padded,
-                         oom_events=st.oom, bucketing_overhead_s=overhead,
-                         prefill_time_total=st.t_pre,
-                         decode_time_total=st.t_dec,
-                         transfer_time_total=st.t_xfer)
-
-    # ------------------------------------------------------------ util --
-    def _admit_arrivals(self, arrivals, st):
-        while st.ai < len(arrivals) and arrivals[st.ai].arrival <= st.now:
-            self.sched.on_arrival(arrivals[st.ai], arrivals[st.ai].arrival)
-            st.ai += 1
-
-    @staticmethod
-    def _live_tokens(pool):
-        return sum(r.prompt_len + r.generated for r in pool)
-
-    def _finish_iteration(self, pool, st, end_time):
-        """Advance every pooled request one token; retire finished ones."""
-        cost = self.cost
-        st.useful += 2.0 * cost.p_active * len(pool)
-        st.padded += 2.0 * cost.p_active * len(pool)
-        for r in list(pool):
-            r.generated += 1
-            if r.generated >= r.max_new_tokens:
-                r.finished = end_time
-                st.done += 1
-                pool.remove(r)
-                self.sched.release_decode(r)
-
-    def _handle_oom(self, batch, st):
-        """Evict + re-queue; oversized singletons are dropped (unservable);
-        the scheduler's retry backoff (notify_oom) shrinks its next cap."""
-        if hasattr(self.sched, "notify_oom"):
-            self.sched.notify_oom()
-        for r in batch.requests:
-            if r.prompt_len + r.max_new_tokens > st.kv_budget:
-                r.dropped = True
-                r.finished = -1.0
-                st.done += 1
-                continue
-            r.arrival = st.now + self.restart_penalty
-            self.sched.on_arrival(r, r.arrival)
-
-    def _account_prefill(self, batch, dt, st):
-        cost = self.cost
-        st.busy_p += dt
-        st.t_pre += dt * batch.size
-        st.useful += 2.0 * cost.p_active * batch.total_tokens
-        st.padded += 2.0 * cost.p_active * batch.padded_tokens
-
-    # --------------------------------------------------------- disagg --
-    def _run_disagg(self, arrivals, st, time_limit):
-        cost, sched = self.cost, self.sched
-        pool: List[Request] = []
-        pending_join: List[list] = []     # [ready_time, req]
-        prefill_free = decode_free = 0.0
-
-        while st.done < self._n and st.now < time_limit:
-            self._admit_arrivals(arrivals, st)
-            for item in list(pending_join):
-                if item[0] <= st.now and len(pool) < self.decode_slot_cap:
-                    pool.append(item[1])
-                    pending_join.remove(item)
-
-            progressed = False
-            if prefill_free <= st.now and sched.queued():
-                batch = sched.next_prefill_batch(st.now)
-                if batch is not None:
-                    batch_tokens = sum(r.prompt_len + r.max_new_tokens
-                                       for r in batch.requests)
-                    pending_tokens = sum(
-                        it[1].prompt_len + it[1].max_new_tokens
-                        for it in pending_join)
-                    if (self._live_tokens(pool) + pending_tokens
-                            + batch_tokens > st.kv_budget):
-                        st.oom += 1
-                        self._handle_oom(batch, st)
-                        prefill_free = st.now + self.restart_penalty
-                    else:
-                        dt = cost.prefill_seconds(batch.size, batch.pad_to)
-                        xfer = cost.transfer_seconds(batch.total_tokens)
-                        for r in batch.requests:
-                            r.prefill_start = st.now
-                            r.first_token = st.now + dt
-                            r.generated = 1
-                            if r.generated >= r.max_new_tokens:
-                                r.finished = st.now + dt
-                                st.done += 1
-                            else:
-                                # KV allocated AT PREFILL: account it now so
-                                # the batcher's Eq. (6) sees in-transfer
-                                # caches too (prevents admission overshoot).
-                                sched.admit_decode(r)
-                                pending_join.append([st.now + dt + xfer, r])
-                        prefill_free = st.now + dt
-                        self._account_prefill(batch, dt, st)
-                        st.t_xfer += xfer * batch.size
-                    progressed = True
-            if decode_free <= st.now and pool:
-                dt = cost.decode_iter_seconds(self._live_tokens(pool),
-                                              len(pool))
-                decode_free = st.now + dt
-                st.busy_d += dt
-                st.t_dec += dt * len(pool)
-                self._finish_iteration(pool, st, st.now + dt)
-                progressed = True
-
-            if not progressed:
-                cands = [c for c in
-                         [prefill_free if sched.queued() else None,
-                          decode_free if pool else None,
-                          arrivals[st.ai].arrival if st.ai < len(arrivals)
-                          else None]
-                         + [it[0] for it in pending_join]
-                         if c is not None and c > st.now]
-                st.now = min(cands) if cands else st.now + self.tick
-
-    # --------------------------------------------------------- coupled --
-    def _run_coupled(self, arrivals, st, time_limit):
-        """Orca/UELLM-style single-executor engines.
-
-        * ``coupled`` (Orca): iteration-level — each iteration fuses the
-          new prefill batch with one decode step over the live pool; exact
-          (selective-batching) KV reads, but prefill inflates every
-          concurrent TPOT (phase interference).
-        * ``static`` (naive static batching, UELLM batch-granularity):
-          a formed batch runs prefill + decode TO COMPLETION.  Every
-          iteration reads the PADDED batch context (all slots padded to
-          the batch max prompt) and the executor is held until the
-          longest member finishes (convoy effect).  This is the mixed-
-          batch decode waste of paper Fig. 3b.
-        """
-        cost, sched = self.cost, self.sched
-        pool: List[Request] = []
-        static = self.mode == "static"
-
-        while st.done < self._n and st.now < time_limit:
-            self._admit_arrivals(arrivals, st)
-            batch = None
-            can_admit = ((not static) or not pool) and \
-                st.now >= st.oom_cooldown_until
-            if sched.queued() and can_admit and \
-                    len(pool) < self.decode_slot_cap:
-                batch = sched.next_prefill_batch(st.now)
-                if batch is not None:
-                    batch_tokens = sum(r.prompt_len + r.max_new_tokens
-                                       for r in batch.requests)
-                    if self._live_tokens(pool) + batch_tokens > st.kv_budget:
-                        st.oom += 1
-                        self._handle_oom(batch, st)
-                        st.oom_cooldown_until = st.now + self.restart_penalty
-                        batch = None
-
-            if static:
-                if batch is not None:
-                    self._run_batch_to_completion(batch, st)
-                else:
-                    cands = [c for c in
-                             [arrivals[st.ai].arrival
-                              if st.ai < len(arrivals) else None]
-                             if c is not None and c > st.now]
-                    if sched.queued():
-                        cands.append(st.now + self.tick)
-                    st.now = min(cands) if cands else st.now + self.tick
-                continue
-
-            if batch is None and not pool:
-                cands = [c for c in
-                         [arrivals[st.ai].arrival if st.ai < len(arrivals)
-                          else None]
-                         if c is not None and c > st.now]
-                st.now = min(cands) if cands else st.now + self.tick
-                continue
-
-            dt = 0.0
-            if batch is not None:
-                dt += cost.prefill_seconds(batch.size, batch.pad_to)
-            if pool:
-                dt += cost.decode_iter_seconds(self._live_tokens(pool),
-                                               len(pool))
-            end = st.now + dt
-            if batch is not None:
-                for r in batch.requests:
-                    r.prefill_start = st.now
-                    r.first_token = end          # interference: full iter
-                    r.generated = 1
-                self._account_prefill(
-                    batch, cost.prefill_seconds(batch.size, batch.pad_to), st)
-            if pool:
-                ddt = cost.decode_iter_seconds(self._live_tokens(pool),
-                                               len(pool))
-                st.busy_d += ddt
-                st.t_dec += ddt * len(pool)
-                self._finish_iteration(pool, st, end)
-            if batch is not None:
-                for r in batch.requests:
-                    if r.generated >= r.max_new_tokens:
-                        r.finished = end
-                        st.done += 1
-                    else:
-                        pool.append(r)
-                        sched.admit_decode(r)
-            st.now = end
-
-    def _run_batch_to_completion(self, batch, st):
-        """Static/batch-granularity execution with padded decode reads."""
-        cost, sched = self.cost, self.sched
-        n = batch.size
-        pad_prompt = batch.pad_to
-        dt = cost.prefill_seconds(n, pad_prompt)
-        self._account_prefill(batch, dt, st)
-        for r in batch.requests:
-            r.prefill_start = st.now
-            r.first_token = st.now + dt
-            r.generated = 1
-            sched.admit_decode(r)
-        t = st.now + dt
-        iters = max(r.max_new_tokens for r in batch.requests) - 1
-        for i in range(1, iters + 1):
-            context = n * (pad_prompt + i)       # PADDED batch KV read
-            ddt = cost.decode_iter_seconds(context, n)
-            t += ddt
-            st.busy_d += ddt
-            st.t_dec += ddt * n
-            st.useful += 2.0 * cost.p_active * sum(
-                1 for r in batch.requests if r.generated < r.max_new_tokens)
-            st.padded += 2.0 * cost.p_active * n
-            for r in batch.requests:
-                if r.generated < r.max_new_tokens:
-                    r.generated += 1
-                    if r.generated >= r.max_new_tokens:
-                        r.finished = t
-        for r in batch.requests:
-            if r.finished < 0:
-                r.finished = t
-            st.done += 1
-            sched.release_decode(r)
-        st.now = t
-
-
-@dataclasses.dataclass
-class _SimState:
-    kv_budget: float
-    now: float = 0.0
-    ai: int = 0
-    done: int = 0
-    busy_p: float = 0.0
-    busy_d: float = 0.0
-    useful: float = 0.0
-    padded: float = 0.0
-    oom: int = 0
-    t_pre: float = 0.0
-    t_dec: float = 0.0
-    t_xfer: float = 0.0
-    oom_cooldown_until: float = 0.0
+        return self.loop.run(requests, time_limit=time_limit)

@@ -1,7 +1,16 @@
-"""Serving launcher: BucketServe engine on the local device mesh.
+"""Serving launcher: BucketServe on the unified serving loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        [--requests 32] [--dataset mixed] [--data 2 --model 2]
+        [--backend jax|sim] [--chunk 128] [--requests 32] \
+        [--dataset mixed] [--data 2 --model 2]
+
+``--backend jax`` (default) runs the real engine: jitted prefill/decode
+with slot-pool continuous batching; ``--chunk N`` enables chunked
+prefill (decode iterations interleave between N-token prompt chunks).
+``--backend sim`` drives the SAME scheduler through the analytic cost
+model instead — both are ExecutionBackends under one ServingLoop
+(core/serving_loop.py), which is how the cost model's scheduling
+behaviour is validated against real execution.
 
 On this CPU container use --smoke (reduced config, real execution).  On
 a TPU slice the same entrypoint loads the full config, registers the
@@ -11,15 +20,14 @@ repro/sharding/partition.py.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core import (BucketServeScheduler, MemoryBudget, SchedulerConfig)
 from repro.core.engine import ServingEngine
+from repro.core.simulator import A100X4, CostModel, Simulator
 from repro.data.workload import WorkloadSpec, generate
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tfm
@@ -27,11 +35,34 @@ from repro.sharding import context as shctx
 from repro.sharding import partition
 
 
+def _run_sim(cfg, args, reqs):
+    """Cost-model pass over the identical workload (validation mode)."""
+    hw = A100X4
+    budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes,
+                          n_devices=hw.decode_chips,
+                          weight_bytes=cfg.param_count() * 2)
+    sched = BucketServeScheduler(
+        cfg, budget, SchedulerConfig(max_batch=args.slots,
+                                     trigger=args.trigger))
+    sim = Simulator(sched, CostModel(cfg, hw), mode="disagg",
+                    decode_slot_cap=args.slots, chunk_tokens=args.chunk)
+    res = sim.run(reqs)
+    print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
+          f"{res.makespan:.2f} virtual s; {res.throughput_tok_s():.0f} tok/s; "
+          f"SLO {res.slo_attainment():.2f}; OOM {res.oom_events}; "
+          f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b", choices=list_archs())
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
+    ap.add_argument("--backend", default="jax", choices=["jax", "sim"],
+                    help="real JAX engine or analytic cost model")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="chunked-prefill span in tokens (default: whole "
+                         "prompt)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--dataset", default="mixed")
     ap.add_argument("--rps", type=float, default=8.0)
@@ -49,6 +80,18 @@ def main():
     if not cfg.has_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; serve prefill-only "
                          "workloads via max_new_tokens=1")
+
+    spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
+                        n_requests=args.requests,
+                        max_model_len=cfg.max_seq_len)
+    reqs = generate(spec)
+    for r in reqs:   # keep CPU smoke runs short
+        r.max_new_tokens = min(r.max_new_tokens, 8)
+        r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
+
+    if args.backend == "sim":
+        _run_sim(cfg, args, reqs)
+        return
 
     mesh = None
     if args.data * args.model > 1:
@@ -70,15 +113,8 @@ def main():
                                      trigger=args.trigger))
     engine = ServingEngine(cfg, params, sched, max_slots=args.slots,
                            cache_len=cfg.max_seq_len,
-                           moe_impl="local")
+                           moe_impl="local", chunk_tokens=args.chunk)
 
-    spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
-                        n_requests=args.requests,
-                        max_model_len=cfg.max_seq_len)
-    reqs = generate(spec)
-    for r in reqs:   # keep CPU smoke runs short
-        r.max_new_tokens = min(r.max_new_tokens, 8)
-        r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
     engine.submit(reqs)
     t0 = time.perf_counter()
     done = engine.run(max_wall_s=900)
@@ -86,6 +122,8 @@ def main():
     toks = sum(r.generated for r in done)
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.1f}s; prefill shapes: {engine.n_prefill_shapes}; "
+          f"decode steps interleaved between prefill chunks: "
+          f"{engine.interleaved_decode_steps}; "
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
 
 

@@ -322,6 +322,51 @@ def _ring_from_prefill(k, v, lengths, W):
     return kr, vr
 
 
+def self_attn_chunk(cfg: ModelConfig, p, x, start, cache):
+    """Chunked-prefill self-attention (DESIGN.md §2): Tc new tokens at
+    absolute positions [start, start+Tc) attend causally over the cache
+    prefix written by earlier chunks plus themselves.
+
+    x: (B,Tc,d); start: () int32 (traced — one executable serves every
+    chunk offset); cache as in self_attn_decode (int8 caches are
+    4-tuples).  Requires a POSITIONAL (non-ring) cache: chunks are
+    written contiguously from 0, so the causal mask alone hides every
+    unwritten slot (kpos > max qpos) — no validity bookkeeping needed.
+    Rows whose prompt ended before ``start`` write garbage K/V beyond
+    their length; those positions are overwritten by decode before they
+    ever become valid (same invariant as padded whole-prompt prefill).
+    """
+    B, Tc, _ = x.shape
+    quant = cfg.kv_cache_dtype == "int8"
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    positions = start + jnp.arange(Tc)[None] + jnp.zeros((B, 1), jnp.int32)
+    cos, sin = layers.rope_angles(positions, cfg.d_head, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    if quant:
+        k_cache, v_cache, k_s, v_s = cache
+        kq, ks_new = quantize_kv(k)
+        vq, vs_new = quantize_kv(v)
+    else:
+        k_cache, v_cache = cache
+        kq, vq = k, v
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, start, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, start, axis=1)
+    if quant:
+        k_s = jax.lax.dynamic_update_slice_in_dim(k_s, ks_new, start, axis=1)
+        v_s = jax.lax.dynamic_update_slice_in_dim(v_s, vs_new, start, axis=1)
+        with jax.named_scope("vmem_fused:flash_prefill_int8"):
+            kd = dequantize_kv(k_cache, k_s, q.dtype)
+            vd = dequantize_kv(v_cache, v_s, q.dtype)
+    else:
+        kd, vd = k_cache, v_cache
+    out = full_attention(q, kd, vd, causal=True, q_offset=start)
+    out = out.reshape(B, Tc, cfg.q_dim) @ p["wo"]
+    new_cache = (k_cache, v_cache, k_s, v_s) if quant else (k_cache, v_cache)
+    return out, new_cache
+
+
 def distributed_decode_attention(q, k_cache, v_cache, pos, mesh, *,
                                  window: int = 0):
     """Flash-decode over a SEQUENCE-sharded KV cache (distributed

@@ -94,6 +94,19 @@ class ModelConfig:
         return not self.is_encoder
 
     @property
+    def chunkable_prefill(self) -> bool:
+        """Chunked prefill needs a POSITIONAL KV cache (chunks written
+        contiguously, causal mask hides unwritten slots).  Ring caches
+        (sliding-window / hybrid-local) and cross-attention vision KV
+        are excluded — those configs fall back to whole-prompt prefill.
+        Shared gate for the real engine and the cost model."""
+        if self.arch_type == "vlm":
+            return False
+        win = self.sliding_window or (
+            self.local_window if self.arch_type == "hybrid" else 0)
+        return win == 0
+
+    @property
     def subquadratic(self) -> bool:
         """Can this config serve 500k-token contexts?
 

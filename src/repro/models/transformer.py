@@ -147,20 +147,26 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
 # ---------------------------------------------------------- block apply ---
 def _apply_block(cfg: ModelConfig, btype: str, p, x, *, mode: str,
                  positions=None, lengths=None, cache=None, pos=None,
-                 vis=None, moe_impl="local", mesh=None, cache_len=0):
-    """One block. mode: 'fwd' | 'prefill' | 'decode'.
-    Returns (x, new_cache_slot)."""
+                 vis=None, moe_impl="local", mesh=None, cache_len=0,
+                 chunk_start=None):
+    """One block. mode: 'fwd' | 'prefill' | 'chunk' | 'decode'.
+    Returns (x, new_cache_slot).  'chunk' continues an existing cache
+    from absolute position ``chunk_start`` (chunked prefill)."""
     win = effective_window(cfg)
     new_cache = cache
 
     if btype in (BLOCK_ATTN, BLOCK_MOE):
         h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
-        if mode == "decode":
+        if mode in ("decode", "chunk"):
             ctuple = (cache["k"], cache["v"], cache["k_s"], cache["v_s"]) \
                 if cfg.kv_cache_dtype == "int8" else \
                 (cache["k"], cache["v"])
-            a, new_cache = attention.self_attn_decode(
-                cfg, p["attn"], h, pos, ctuple, window=win)
+            if mode == "chunk":
+                a, new_cache = attention.self_attn_chunk(
+                    cfg, p["attn"], h, chunk_start, ctuple)
+            else:
+                a, new_cache = attention.self_attn_decode(
+                    cfg, p["attn"], h, pos, ctuple, window=win)
         else:
             a, kv = attention.self_attn_forward(
                 cfg, p["attn"], h, positions, lengths,
@@ -176,7 +182,7 @@ def _apply_block(cfg: ModelConfig, btype: str, p, x, *, mode: str,
             x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
         else:
             x = x + _apply_moe(cfg, p["moe"], h, moe_impl, mesh)
-        if mode == "decode":
+        if mode in ("decode", "chunk"):
             nc = {"k": new_cache[0], "v": new_cache[1]}
             if cfg.kv_cache_dtype == "int8":
                 nc["k_s"], nc["v_s"] = new_cache[2], new_cache[3]
@@ -278,7 +284,7 @@ def _project_vision(cfg, params, vision_embeds):
 
 def _run_groups(cfg, params, x, *, mode, positions=None, lengths=None,
                 cache=None, pos=None, vis=None, moe_impl="local", mesh=None,
-                cache_len=0, remat=False):
+                cache_len=0, remat=False, chunk_start=None):
     new_groups = []
     for gi, (pattern, reps) in enumerate(cfg.block_groups()):
         gparams = params["groups"][gi]
@@ -296,7 +302,8 @@ def _run_groups(cfg, params, x, *, mode, positions=None, lengths=None,
                 xx, nc = _apply_block(
                     cfg, pattern[j], p_j, xx, mode=mode, positions=positions,
                     lengths=lengths, cache=c_j, pos=pos, vis=vis,
-                    moe_impl=moe_impl, mesh=mesh, cache_len=cache_len)
+                    moe_impl=moe_impl, mesh=mesh, cache_len=cache_len,
+                    chunk_start=chunk_start)
                 new_slots.append(nc if nc is not None else 0)
             return xx, tuple(new_slots)
 
@@ -350,6 +357,55 @@ def prefill(cfg: ModelConfig, params, tokens=None, embeds=None,
     head = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = layers.unembed_apply(head, last)
     return logits, {"pos": lengths.astype(jnp.int32), "groups": new_groups}
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs a POSITIONAL KV cache (chunks written
+    contiguously, causal mask hides unwritten slots).  Ring caches
+    (sliding-window / hybrid-local) and cross-attention vision KV are
+    excluded — those configs fall back to whole-prompt prefill."""
+    return cfg.chunkable_prefill
+
+
+def prefill_chunk(cfg: ModelConfig, params, tokens, cache, start, lengths,
+                  moe_impl="local", mesh=None):
+    """One chunked-prefill step (DESIGN.md §2): process prompt tokens at
+    absolute positions [start, start+Tc) against an existing cache.
+
+    tokens: (B,Tc) — the chunk slice of the padded prompt matrix
+    (garbage beyond a row's length is fine); cache: pytree from
+    ``init_cache`` threaded through successive chunks; start: () int
+    (traced — one executable serves every offset); lengths: (B,) FULL
+    prompt lengths.
+
+    Returns (last_logits (B,V), new_cache).  ``last_logits[b]`` is the
+    next-token distribution for row ``b`` ONLY when its final prompt
+    position lies inside this chunk; the caller gathers first tokens
+    chunk by chunk.  Rows already fully processed (length <= start) keep
+    their cache state bit-for-bit (recurrent carries are frozen).
+    The caller owns ``cache['pos']`` and must set it to ``lengths``
+    after the final chunk (mirrors ``prefill``'s returned pos).
+    """
+    x = layers.embed_apply(params["embed"], tokens)
+    B, Tc, _ = x.shape
+    rel_len = jnp.clip(lengths - start, 0, Tc)
+    x, new_groups = _run_groups(
+        cfg, params, x, mode="chunk", lengths=rel_len, cache=cache,
+        chunk_start=start, moe_impl=moe_impl, mesh=mesh)
+    # freeze every cache leaf of rows that finished in an earlier chunk:
+    # recurrent carries (e.g. RWKV token-shift) would otherwise be
+    # clobbered by this chunk's garbage tail
+    active = lengths > start                               # (B,)
+    def _keep(new, old):
+        m = active.reshape((1, B) + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+    new_groups = jax.tree.map(_keep, new_groups, cache["groups"])
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    idx = jnp.clip(lengths - 1 - start, 0, Tc - 1)
+    last = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed_apply(head, last)
+    return logits, {"pos": cache["pos"], "groups": new_groups}
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, moe_impl="local",

@@ -9,6 +9,9 @@ Property-based tests (hypothesis) pin the system invariants:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property-based invariants need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -163,7 +166,7 @@ class TestBatcher:
         batch = ctl.form_batch(mk_reqs(lengths))
         if len(batch.requests) > 1:
             pad = max(r.prompt_len + r.max_new_tokens for r in batch.requests)
-            pad = ctl._round(pad)
+            pad = ctl.round_up(pad)
             assert pad * len(batch.requests) * ctl.kv_per_tok <= \
                 budget.m_safe()
 

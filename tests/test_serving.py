@@ -1,4 +1,5 @@
-"""End-to-end serving: simulator behaviour + real-engine integration."""
+"""End-to-end serving: the unified ServingLoop driving both backends —
+cost-model simulation + real-engine integration + engine/sim parity."""
 import dataclasses
 
 import jax
@@ -6,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import (BucketServeScheduler, MemoryBudget, SchedulerConfig,
-                        TaskType)
+from repro.core import (BucketServeScheduler, GlobalMonitor, MemoryBudget,
+                        SchedulerConfig, TaskType)
 from repro.core.baselines import SIM_MODE, hardware_for, make_scheduler
 from repro.core.engine import ServingEngine
 from repro.core.request import Request
@@ -137,3 +138,204 @@ class TestEngine:
         eng.submit(reqs)
         done = eng.run(max_wall_s=300)
         assert len(done) == 6
+
+
+class TestChunkedPrefill:
+    """Chunked prefill (DESIGN.md §2): prefill_chunk composition is
+    bit-exact vs whole-prompt prefill, and the engine interleaves decode
+    iterations between a long prompt's chunks."""
+
+    def test_prefill_chunk_matches_prefill(self):
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=128)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        lens = np.array([10, 37, 64], np.int32)
+        B, pad, C = 3, 64, 16
+        toks = np.zeros((B, pad), np.int32)
+        for i, L in enumerate(lens):
+            toks[i, :L] = rng.integers(0, cfg.vocab_size, L)
+        logits_full, cache_full = tfm.prefill(
+            cfg, params, tokens=jax.numpy.asarray(toks),
+            lengths=jax.numpy.asarray(lens), cache_len=128)
+        cache = tfm.init_cache(cfg, B, 128)
+        collected = np.zeros((B, cfg.vocab_size), np.float32)
+        for s in range(0, pad, C):
+            lg, cache = tfm.prefill_chunk(
+                cfg, params, jax.numpy.asarray(toks[:, s:s + C]), cache, s,
+                jax.numpy.asarray(lens))
+            fin = ((lens - 1) >= s) & ((lens - 1) < s + C)
+            collected[fin] = np.asarray(lg)[fin]
+        np.testing.assert_allclose(collected, np.asarray(logits_full),
+                                   rtol=1e-5, atol=1e-5)
+        # cache parity at every valid position (per-row prompt length)
+        k_full = cache_full["groups"][0][0]["k"]
+        k_chunk = cache["groups"][0][0]["k"]
+        for b, L in enumerate(lens):
+            np.testing.assert_allclose(np.asarray(k_chunk[:, b, :L]),
+                                       np.asarray(k_full[:, b, :L]),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_chunk_gating(self):
+        """Ring-cache (windowed) and VLM configs fall back to whole-prompt
+        prefill — chunking needs a positional cache."""
+        assert tfm.supports_chunked_prefill(
+            get_smoke_config("qwen3-14b", max_seq_len=128))
+        assert not tfm.supports_chunked_prefill(
+            get_smoke_config("recurrentgemma-2b", max_seq_len=128))
+        assert not tfm.supports_chunked_prefill(
+            get_smoke_config("qwen3-14b", max_seq_len=128,
+                             sliding_window=48))
+
+    def test_engine_interleaves_decode_between_chunks(self):
+        """Short requests keep decoding while a long prompt prefills in
+        chunks — the phase-interference fix chunking exists for."""
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=256)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        sched = BucketServeScheduler(cfg, budget,
+                                     SchedulerConfig(max_batch=4))
+        eng = ServingEngine(cfg, params, sched, max_slots=4, cache_len=256,
+                            chunk_tokens=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=i, prompt_len=int(rng.integers(8, 48)),
+                        max_new_tokens=8, arrival=0.0,
+                        task_type=TaskType.ONLINE) for i in range(6)]
+        reqs += [Request(rid=100 + i, prompt_len=200, max_new_tokens=4,
+                         arrival=0.0, task_type=TaskType.OFFLINE)
+                 for i in range(2)]
+        eng.submit(reqs)
+        done = eng.run(max_wall_s=300)
+        assert len(done) == len(reqs)
+        for r in done:
+            assert r.generated == r.max_new_tokens
+            assert len(eng.outputs[r.rid]) == r.max_new_tokens
+        assert eng.interleaved_decode_steps > 0
+
+    def test_chunked_tokens_match_unchunked(self):
+        """Same workload with and without chunking produces the same
+        token streams (chunking changes scheduling, not math)."""
+        outs = []
+        for chunk in (None, 32):
+            cfg = get_smoke_config("qwen3-14b", max_seq_len=128)
+            params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+            budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                                  weight_bytes=0)
+            sched = BucketServeScheduler(cfg, budget,
+                                         SchedulerConfig(max_batch=4))
+            eng = ServingEngine(cfg, params, sched, max_slots=4,
+                                cache_len=128, chunk_tokens=chunk)
+            rng = np.random.default_rng(7)
+            reqs = [Request(rid=i, prompt_len=int(rng.integers(40, 100)),
+                            max_new_tokens=5, arrival=0.0,
+                            task_type=TaskType.OFFLINE) for i in range(4)]
+            eng.submit(reqs)
+            done = eng.run(max_wall_s=300)
+            assert len(done) == 4
+            outs.append({r.rid: eng.outputs[r.rid] for r in reqs})
+        assert outs[0] == outs[1]
+
+
+class _RecordingScheduler(BucketServeScheduler):
+    """Records every formed batch (request-id tuples) for parity checks."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.formed = []
+
+    def next_prefill_batch(self, now):
+        batch = super().next_prefill_batch(now)
+        if batch is not None:
+            self.formed.append(tuple(r.rid for r in batch.requests))
+        return batch
+
+
+class TestBackendParity:
+    """The tentpole invariant: ONE scheduling policy, pluggable
+    substrates.  The same BucketServeScheduler driven through the
+    CostModelBackend (virtual time) and the JaxEngineBackend (wall time)
+    on an identical workload must make identical scheduling decisions —
+    same batch compositions, same bucket boundaries."""
+
+    N, SLOTS = 12, 4
+
+    def _workload(self):
+        rng = np.random.default_rng(11)
+        return [Request(rid=i, prompt_len=int(rng.integers(8, 100)),
+                        max_new_tokens=4, arrival=0.0,
+                        task_type=TaskType.ONLINE) for i in range(self.N)]
+
+    def _sched(self, cfg):
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        return _RecordingScheduler(cfg, budget,
+                                   SchedulerConfig(max_batch=self.SLOTS))
+
+    def test_same_batches_and_buckets(self):
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=128)
+
+        sched_sim = self._sched(cfg)
+        sim = Simulator(sched_sim, CostModel(cfg, A100X4), mode="disagg",
+                        decode_slot_cap=self.SLOTS)
+        res = sim.run(self._workload())
+        assert len(res.finished()) == self.N
+
+        sched_eng = self._sched(cfg)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params, sched_eng, max_slots=self.SLOTS,
+                            cache_len=128)
+        eng.submit(self._workload())
+        done = eng.run(max_wall_s=300)
+        assert len(done) == self.N
+
+        assert sched_sim.formed == sched_eng.formed
+        assert [(b.low, b.up) for b in sched_sim.buckets.buckets] == \
+               [(b.low, b.up) for b in sched_eng.buckets.buckets]
+
+
+class TestRequeueStats:
+    """Re-queues (OOM evictions, slot clamps) must not double-count
+    arrival statistics (the pre-refactor double-increment bug)."""
+
+    def test_monitor_requeue_skips_workload_stats(self):
+        m = GlobalMonitor()
+        m.on_arrival(0.0, 100)
+        m.on_requeue()
+        assert m.queue_len == 2            # occupancy restored
+        assert len(m.arrivals) == 1        # rate window NOT re-counted
+        assert len(m.seq_lens) == 1        # seq-len stats NOT re-counted
+
+    def test_scheduler_requeue_path(self):
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        sched = BucketServeScheduler(CFG, budget, SchedulerConfig())
+        r = Request(rid=0, prompt_len=64, max_new_tokens=8, arrival=0.0)
+        sched.on_arrival(r, 0.0)
+        batch = sched.next_prefill_batch(0.0)
+        assert batch is not None and batch.requests == [r]
+        sched.on_arrival(r, 1.0, requeue=True)
+        assert sched.queued() == 1
+        assert sched.monitor.queue_len == 1
+        assert len(sched.monitor.arrivals) == 1      # not double-counted
+        assert len(sched.monitor.seq_lens) == 1
+
+    def test_engine_slot_clamp_requeues_without_double_count(self):
+        """Batch larger than free slots: the excess re-queues and still
+        gets served, with arrival stats counted exactly once."""
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=128)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        # scheduler may form batches of 8; the engine only has 3 slots
+        sched = BucketServeScheduler(cfg, budget,
+                                     SchedulerConfig(max_batch=8))
+        eng = ServingEngine(cfg, params, sched, max_slots=3, cache_len=128)
+        rng = np.random.default_rng(2)
+        reqs = [Request(rid=i, prompt_len=int(rng.integers(8, 60)),
+                        max_new_tokens=3, arrival=0.0,
+                        task_type=TaskType.OFFLINE) for i in range(8)]
+        eng.submit(reqs)
+        done = eng.run(max_wall_s=300)
+        assert len(done) == 8
+        assert len(sched.monitor.seq_lens) == 8      # once per request
+        assert sched.monitor.queue_len == 0

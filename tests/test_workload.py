@@ -1,6 +1,8 @@
 """Workload generators: distribution + determinism properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property-based invariants need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.request import TaskType
