@@ -6,6 +6,7 @@ from .batcher import (DynamicBatchController, FormedBatch,  # noqa: F401
 from .scheduler import (BucketServeScheduler, SchedulerBase,  # noqa: F401
                         SchedulerConfig)
 from .monitor import GlobalMonitor                          # noqa: F401
+from .paging import BlockAllocator                          # noqa: F401
 from .serving_loop import (Clock, ExecutionBackend,         # noqa: F401
                            LoopConfig, PrefillJob, ServeResult,
                            ServingLoop, VirtualClock, WallClock)

@@ -8,12 +8,16 @@ The 2LHDB factor is ``ModelConfig.kv_bytes_per_token`` (which correctly
 zeroes attention-free layers and window-caps SWA/local-attention layers —
 the TPU adaptation of the paper's A100 memory model, DESIGN.md §4).
 
-Two memory models:
+Three memory models:
   * ``"sum"``    — the paper's Eq. (6): footprint ∝ Σ S_i (per-request
-    exact allocation; what vLLM-style paged memory achieves).
-  * ``"padded"`` — footprint ∝ N × S_pad (bucket-upper padding; what a
-    static-shape TPU runtime actually allocates).  Beyond-paper but
-    required for honest TPU memory accounting; used by the real engine.
+    exact allocation; the idealized lower bound).
+  * ``"padded"`` — footprint ∝ N × S_pad (bucket-upper padding; what the
+    real engine's contiguous slot pool actually allocates).  Beyond-paper
+    but required for honest TPU memory accounting.
+  * ``"paged"``  — footprint ∝ Σ ceil(S_i / page) × page: Eq. (6) made
+    EXACT for the block-table decode pool (core/paging.py, DESIGN.md §3)
+    — within one page of "sum" per request, and what the paged engine
+    physically pins.
 """
 from __future__ import annotations
 
@@ -62,10 +66,12 @@ class DynamicBatchController:
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget,
                  memory_model: str = "sum", bytes_per_el: int = 2,
                  max_batch: int = 512, decode_reserve: float = 0.5,
-                 pad_multiple: int = 128):
+                 pad_multiple: int = 128, page_size: int = 128):
+        assert memory_model in ("sum", "padded", "paged"), memory_model
         self.cfg = cfg
         self.budget = budget
         self.memory_model = memory_model
+        self.page_size = page_size
         # quantized-KV variant: Eq. (6) admits ~2x the live tokens
         self.kv_per_tok = max(cfg.cache_bytes_per_token(), 1)
         self.state_per_req = cfg.state_bytes(bytes_per_el)
@@ -100,8 +106,8 @@ class DynamicBatchController:
             if len(take) >= self.max_batch:
                 break
             clen = self._cache_len(r)
-            if self.memory_model == "sum":
-                new_tot = tot + clen
+            if self.memory_model in ("sum", "paged"):
+                new_tot = tot + self.charge_tokens(clen)
                 if take and new_tot > cap:
                     break
                 tot = new_tot
@@ -122,3 +128,12 @@ class DynamicBatchController:
         the padded shape a formed batch compiles/executes at."""
         m = self.pad_multiple
         return -(-n // m) * m if n else 0
+
+    def charge_tokens(self, cache_tokens: int) -> int:
+        """Tokens a cache of ``cache_tokens`` is CHARGED against the
+        budget: exact under "sum"/"padded" accounting, ceil-to-page under
+        "paged" (a request pins whole pages — Eq. (6) on page granules)."""
+        if self.memory_model != "paged":
+            return cache_tokens
+        p = self.page_size
+        return -(-cache_tokens // p) * p

@@ -18,6 +18,21 @@ pad-shape for prefill (bucketing bounds the executable count — the
 recompilation argument for bucketing on TPU), one per chunk shape when
 chunked prefill is on, one for decode.
 
+Paged decode pool (``paged=True``, DESIGN.md §3): slot KV caches are no
+longer preallocated at ``cache_len`` — self-attention K/V live in a
+SHARED page pool indexed through per-slot block tables
+(``transformer.init_paged_cache`` + ``attention.self_attn_decode_paged``,
+Pallas kernel in ``kernels/paged_decode_attn.py``).  A
+:class:`~repro.core.paging.BlockAllocator` hands out pages at
+prefill-insert, extends tables page by page as decode advances, and
+frees on release; the ServingLoop gates admission on free PAGES
+(``admit_blocks``) and preempts the youngest pooled request when pages
+run out mid-decode (``decode_preempt`` -> requeue).  Dead slots point
+at a dedicated trash page so their masked garbage writes can never
+corrupt a live request's pages.  Shapes stay static: the pool and the
+(slots, pages_per_seq) block table are fixed tensors, so ONE decode
+executable serves every allocation layout.
+
 Chunked prefill (DESIGN.md §2): long prompts are split into
 ``chunk_tokens``-sized spans; the serving loop interleaves decode
 iterations between spans, so a 2k-token prefill no longer stalls every
@@ -34,7 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
-from repro.models.config import ModelConfig
+from repro.models.config import BLOCK_ATTN, BLOCK_MOE, ModelConfig
+from . import paging
 from .batcher import FormedBatch
 from .request import Request
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
@@ -49,7 +65,9 @@ class JaxEngineBackend:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  cache_len: Optional[int] = None, moe_impl: str = "local",
                  time_scale: float = 1.0,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None,
+                 paged: bool = False, page_size: int = 128,
+                 kv_pool_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -59,16 +77,50 @@ class JaxEngineBackend:
         self.clock = WallClock(time_scale)
         self.supports_decode = cfg.has_decode
         self.flops_per_token = 2.0 * cfg.active_param_count()
+        self.paged = paged
 
-        self.pool_cache = tfm.init_cache(cfg, max_slots, self.cache_len)
+        if paged:
+            assert tfm.supports_paged_decode(cfg), \
+                f"{cfg.name}: paged KV needs self-attention decode"
+            S = cfg.attn_cache_len(self.cache_len)
+            self.page_size = page_size
+            self.s_attn = S
+            self.pages_per_seq = -(-S // page_size)
+            # same HBM budget as a contiguous pool of max_slots by
+            # default; the trash page comes OUT of the budget
+            total = kv_pool_tokens or max_slots * S
+            n_pages = total // page_size - 1
+            if kv_pool_tokens is not None and n_pages < self.pages_per_seq:
+                raise ValueError(
+                    f"kv_pool_tokens={kv_pool_tokens} too small: the "
+                    f"paged pool needs at least "
+                    f"{(self.pages_per_seq + 1) * page_size} tokens (one "
+                    f"full request of {self.pages_per_seq} pages + the "
+                    f"trash page)")
+            n_pages = max(n_pages, self.pages_per_seq)
+            self.alloc = paging.BlockAllocator(n_pages, page_size)
+            self.trash_page = n_pages            # pool index n_pages
+            self.pool_cache = tfm.init_paged_cache(
+                cfg, max_slots, self.cache_len, n_pages + 1, page_size)
+            self._bt_host = np.full((max_slots, self.pages_per_seq),
+                                    self.trash_page, np.int32)
+            self.pool_cache["block_tables"] = jnp.asarray(self._bt_host)
+            self._bt_dirty = False
+            self._decode_fn = jax.jit(
+                lambda p, t, c: tfm.decode_step(cfg, p, t, c,
+                                                moe_impl=moe_impl,
+                                                page_size=page_size,
+                                                paged_len=S))
+        else:
+            self.pool_cache = tfm.init_cache(cfg, max_slots, self.cache_len)
+            self._decode_fn = jax.jit(
+                lambda p, t, c: tfm.decode_step(cfg, p, t, c,
+                                                moe_impl=moe_impl))
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self._slot_of: Dict[int, int] = {}
         self.next_tok = jnp.zeros((max_slots,), jnp.int32)
         self.outputs: Dict[int, List[int]] = {}
         self._prefill_fns: Dict[tuple, callable] = {}
-        self._decode_fn = jax.jit(
-            lambda p, t, c: tfm.decode_step(cfg, p, t, c,
-                                            moe_impl=moe_impl))
         self.n_prefill_shapes = 0
 
     # ------------------------------------------------------------- jits --
@@ -114,6 +166,47 @@ class JaxEngineBackend:
 
     def free_slots(self) -> int:
         return sum(1 for r in self.slot_req if r is None)
+
+    # ------------------------------------------------- paged KV (§3) -----
+    def _insert_tokens(self, r: Request) -> int:
+        """Tokens a cache holds right after prefill: the prompt plus the
+        first decode write (window-capped for ring caches)."""
+        return min(r.prompt_len + 1, self.s_attn)
+
+    def _decode_tokens(self, r: Request) -> int:
+        """Tokens after this iteration's write at slot prompt+generated-1."""
+        return min(r.prompt_len + r.generated, self.s_attn)
+
+    def free_blocks(self) -> int:
+        """Engine-level observability (serve.py printout); admission
+        itself goes through ``admit_blocks``."""
+        return self.alloc.free_pages() if self.paged else 1 << 30
+
+    def admit_blocks(self, requests: Sequence[Request]) -> int:
+        if not self.paged:
+            return len(requests)
+        return paging.admit_blocks(self.alloc, requests, self._insert_tokens)
+
+    def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
+        if not self.paged:
+            return []
+        victims = paging.extend_for_decode(self.alloc, pool,
+                                           self._decode_tokens)
+        for v in victims:
+            slot = self._slot_of.pop(v.rid, None)
+            if slot is not None:
+                self.slot_req[slot] = None
+                self._bt_host[slot] = self.trash_page
+                self._bt_dirty = True
+            self.outputs[v.rid] = []         # regenerated after re-prefill
+        for r in pool:                       # tables may have grown a page
+            slot = self._slot_of.get(r.rid)
+            if slot is not None:
+                t = np.asarray(self.alloc.table(r.rid), np.int32)
+                if not np.array_equal(self._bt_host[slot, :len(t)], t):
+                    self._bt_host[slot, :len(t)] = t
+                    self._bt_dirty = True
+        return victims
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         total = max(batch.pad_to, 8)     # min real-tensor prompt width
@@ -167,12 +260,14 @@ class JaxEngineBackend:
     def _finish_prefill(self, job: PrefillJob) -> None:
         """First tokens out; batched slot insertion for continuing rows."""
         h = job.handle
-        slots, rows, firsts = [], [], []
+        slots, rows, firsts, tables = [], [], [], []
         free = iter(i for i, r in enumerate(self.slot_req) if r is None)
         for i, r in enumerate(job.batch.requests):
             tok = int(h["first"][i])
             self.outputs[r.rid].append(tok)
             if r.max_new_tokens <= 1 or not self.cfg.has_decode:
+                if self.paged:
+                    self.alloc.release(r.rid)    # done at first token
                 continue
             slot = next(free)
             self.slot_req[slot] = r
@@ -180,8 +275,17 @@ class JaxEngineBackend:
             slots.append(slot)
             rows.append(i)
             firsts.append(tok)
+            if self.paged:
+                t = self.alloc.table(r.rid)      # reserved at admission
+                self._bt_host[slot] = self.trash_page
+                self._bt_host[slot, :len(t)] = t
+                tables.append(t)
         if slots:
-            self._insert_slots(h["cache"], slots, rows, firsts)
+            if self.paged:
+                self._insert_slots_paged(h["cache"], slots, rows, firsts,
+                                         tables)
+            else:
+                self._insert_slots(h["cache"], slots, rows, firsts)
         job.handle = None
 
     def _insert_slots(self, batch_cache, slots: List[int], rows: List[int],
@@ -199,8 +303,68 @@ class JaxEngineBackend:
         self.next_tok = self.next_tok.at[sl].set(
             jnp.asarray(firsts, jnp.int32))
 
+    def _insert_slots_paged(self, batch_cache, slots: List[int],
+                            rows: List[int], firsts: List[int],
+                            tables: List[List[int]]) -> None:
+        """Scatter prefilled caches into the page pool: attention K/V
+        rows are chopped into page-sized spans and written to each
+        request's allocated pages (one scatter per leaf for the whole
+        batch); per-slot leaves (recurrent state, vision KV, positions)
+        use the contiguous slot scatter unchanged."""
+        sl = jnp.asarray(slots, jnp.int32)
+        rw = jnp.asarray(rows, jnp.int32)
+        pos = self.pool_cache["pos"].at[sl].set(batch_cache["pos"][rw])
+        dst, srow, spg = [], [], []
+        for row, t in zip(rows, tables):
+            for j, pg in enumerate(t):
+                dst.append(pg)
+                srow.append(row)
+                spg.append(j)
+        dst = jnp.asarray(dst, jnp.int32)
+        srow = jnp.asarray(srow, jnp.int32)
+        spg = jnp.asarray(spg, jnp.int32)
+        page, maxp = self.page_size, self.pages_per_seq
+
+        def scatter_pages(pool_leaf, batch_leaf):
+            pad = maxp * page - batch_leaf.shape[2]
+            if pad:
+                widths = [(0, 0)] * batch_leaf.ndim
+                widths[2] = (0, pad)
+                batch_leaf = jnp.pad(batch_leaf, widths)
+            bp = batch_leaf.reshape(batch_leaf.shape[:2] + (maxp, page)
+                                    + batch_leaf.shape[3:])
+            return pool_leaf.at[:, dst].set(bp[:, srow, spg])
+
+        new_groups = []
+        for gi, (pattern, reps) in enumerate(self.cfg.block_groups()):
+            slots_out = []
+            for j, btype in enumerate(pattern):
+                pool_slot = self.pool_cache["groups"][gi][j]
+                bc_slot = batch_cache["groups"][gi][j]
+                if btype in (BLOCK_ATTN, BLOCK_MOE):
+                    slots_out.append({k: scatter_pages(pool_slot[k],
+                                                       bc_slot[k])
+                                      for k in pool_slot})
+                else:
+                    slots_out.append(jax.tree.map(
+                        lambda pf, bf: pf.at[:, sl].set(bf[:, rw]),
+                        pool_slot, bc_slot))
+            new_groups.append(tuple(slots_out))
+        self.pool_cache = {"pos": pos,
+                           "block_tables": jnp.asarray(self._bt_host),
+                           "groups": tuple(new_groups)}
+        self._bt_dirty = False
+        self.next_tok = self.next_tok.at[sl].set(
+            jnp.asarray(firsts, jnp.int32))
+
     def decode_iter(self, pool: Sequence[Request],
                     context_tokens: int) -> float:
+        if self.paged and self._bt_dirty:
+            # tables changed (extend/preempt/release) — push the tiny
+            # (slots, pages_per_seq) int32 host mirror; steady-state
+            # decode iterations skip the transfer
+            self.pool_cache["block_tables"] = jnp.asarray(self._bt_host)
+            self._bt_dirty = False
         logits, self.pool_cache = self._decode_fn(
             self.params, self.next_tok, self.pool_cache)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -215,6 +379,11 @@ class JaxEngineBackend:
         slot = self._slot_of.pop(req.rid, None)
         if slot is not None:
             self.slot_req[slot] = None
+        if self.paged:
+            self.alloc.release(req.rid)
+            if slot is not None:
+                self._bt_host[slot] = self.trash_page
+                self._bt_dirty = True
 
 
 class ServingEngine:
@@ -226,14 +395,17 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, scheduler, *,
                  max_slots: int = 8, cache_len: Optional[int] = None,
                  moe_impl: str = "local", time_scale: float = 1.0,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None, paged: bool = False,
+                 page_size: int = 128,
+                 kv_pool_tokens: Optional[int] = None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
         self.backend = JaxEngineBackend(
             cfg, params, max_slots=max_slots, cache_len=cache_len,
             moe_impl=moe_impl, time_scale=time_scale,
-            chunk_tokens=chunk_tokens)
+            chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
+            kv_pool_tokens=kv_pool_tokens)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots))
         self.result: Optional[ServeResult] = None

@@ -1,0 +1,145 @@
+"""Paged KV-cache accounting: fixed-size page pool + block tables.
+
+This is the host-side bookkeeping half of the paged decode pool
+(DESIGN.md §3).  A :class:`BlockAllocator` owns a free list of
+fixed-size pages and a per-request block table; both execution
+backends (real JAX engine and the analytic cost model) drive the SAME
+allocator logic through :func:`admit_blocks` / :func:`extend_for_decode`
+so their admission decisions cannot drift (the backend-parity
+invariant).
+
+The paper's Eq. (6) becomes an EXACT block budget here: a request
+holding ``t`` live tokens pins ``ceil(t / page_size)`` pages — no
+per-slot ``cache_len`` preallocation, which is what lets a 40-token
+Alpaca request and a 32k LongBench request share one HBM pool without
+the short request paying for the long one's worst case.
+
+Invariants (property-tested in tests/test_paging.py):
+  * a page is never assigned to two live requests at once;
+  * free + live == total (no leaks);
+  * a live request's table holds exactly ``ceil(tokens / page_size)``
+    pages.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence
+
+
+class BlockAllocator:
+    """Free-list allocator of fixed-size KV pages with block tables.
+
+    Token-level API: callers say how many tokens a request holds and the
+    allocator keeps its table at exactly ``ceil(tokens / page_size)``
+    pages.  ``alloc``/``extend`` are all-or-nothing — on exhaustion they
+    return None and the allocator state is unchanged (no partial grabs),
+    so callers can preempt and retry without unwinding.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0, (n_pages, page_size)
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO free list: released pages are reused first (locality)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._tables: Dict[int, List[int]] = {}
+
+    # ----------------------------------------------------------- queries --
+    def pages_for(self, tokens: int) -> int:
+        return -(-max(tokens, 0) // self.page_size)
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def live_pages(self) -> int:
+        return sum(len(t) for t in self._tables.values())
+
+    def table(self, rid: int) -> List[int]:
+        return list(self._tables.get(rid, ()))
+
+    def holds(self, rid: int) -> bool:
+        return rid in self._tables
+
+    # ------------------------------------------------------------- edits --
+    def alloc(self, rid: int, tokens: int) -> Optional[List[int]]:
+        """Admit ``rid`` with ``tokens`` live tokens.  Returns its block
+        table, or None if the pool cannot hold it (state unchanged)."""
+        assert rid not in self._tables, f"rid {rid} already live"
+        need = self.pages_for(tokens)
+        if need > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[rid] = pages
+        return list(pages)
+
+    def extend(self, rid: int, tokens: int) -> Optional[List[int]]:
+        """Grow ``rid``'s table to cover ``tokens`` tokens.  Returns the
+        NEWLY added pages ([] if already covered), or None on exhaustion
+        (state unchanged).  Tables never shrink mid-flight."""
+        assert rid in self._tables, f"rid {rid} not live"
+        have = self._tables[rid]
+        need = max(self.pages_for(tokens), len(have))
+        grow = need - len(have)
+        if grow > len(self._free):
+            return None
+        new = [self._free.pop() for _ in range(grow)]
+        have.extend(new)
+        return new
+
+    def release(self, rid: int) -> int:
+        """Free all of ``rid``'s pages; returns how many (0 if unknown —
+        release is idempotent so preemption/finish races are harmless)."""
+        pages = self._tables.pop(rid, None)
+        if pages is None:
+            return 0
+        self._free.extend(pages)
+        return len(pages)
+
+
+# ------------------------------------------------------- shared policies --
+def admit_blocks(alloc: BlockAllocator, requests: Sequence,
+                 insert_tokens: Callable[[object], int]) -> int:
+    """Admission gate: allocate insert-time pages for a PREFIX of the
+    batch; returns how many requests were admitted.  ``insert_tokens``
+    maps a request to the tokens its cache holds right after prefill
+    (prompt + the first decode write, window-capped).  The loop re-queues
+    the rest — the block analogue of the decode-slot clamp."""
+    n = 0
+    for r in requests:
+        if alloc.alloc(r.rid, insert_tokens(r)) is None:
+            break
+        n += 1
+    return n
+
+
+def extend_for_decode(alloc: BlockAllocator, pool: Sequence,
+                      decode_tokens: Callable[[object], int]) -> List:
+    """Pre-decode page extension with preemption: grow every pooled
+    request's table to cover its next token write; on exhaustion evict
+    the YOUNGEST pooled request (latest arrival, then highest rid) and
+    retry.  Only requests strictly younger than the one being extended
+    are eviction candidates — if the starving request IS the youngest,
+    it preempts itself rather than robbing an older request of its
+    pages.  Oldest-first processing therefore guarantees the head of
+    the pool always progresses (no livelock).  Returns the victims
+    (their pages already released); the caller re-queues them."""
+    victims: List = []
+    order = sorted(pool, key=lambda r: (r.arrival, r.rid))
+    for r in order:
+        if r in victims:
+            continue
+        while alloc.extend(r.rid, decode_tokens(r)) is None:
+            younger = [c for c in order if c not in victims and c is not r
+                       and alloc.holds(c.rid)
+                       and (c.arrival, c.rid) > (r.arrival, r.rid)]
+            if not younger:
+                # r is the youngest live request and still starves: it
+                # preempts ITSELF (never an older one — they are closer
+                # to finishing and have consumed more work)
+                alloc.release(r.rid)
+                victims.append(r)
+                break
+            v = max(younger, key=lambda c: (c.arrival, c.rid))
+            alloc.release(v.rid)
+            victims.append(v)
+    return victims

@@ -33,7 +33,8 @@ class SchedulerConfig:
     assignment: str = "linear"           # linear (paper) | bisect (beyond)
     refine: str = "midpoint"             # midpoint (paper) | eq4 (beyond)
     trigger: str = "majority"            # majority (paper) | waste (beyond)
-    memory_model: str = "sum"            # sum (paper Eq. 6) | padded (TPU)
+    memory_model: str = "sum"            # sum (Eq. 6) | padded | paged
+    page_size: int = 128                 # KV page (memory_model="paged")
     max_batch: int = 512
     decode_reserve: float = 0.5
     kv_transfer_bw: float = 50e9         # ICI per link (TPU adaptation)
@@ -50,11 +51,11 @@ class SchedulerBase:
 
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget, *,
                  memory_model: str = "sum", max_batch: int = 512,
-                 decode_reserve: float = 0.5):
+                 decode_reserve: float = 0.5, page_size: int = 128):
         self.cfg = cfg
         self.batcher = DynamicBatchController(
             cfg, budget, memory_model=memory_model, max_batch=max_batch,
-            decode_reserve=decode_reserve)
+            decode_reserve=decode_reserve, page_size=page_size)
         self.monitor = GlobalMonitor()
         self.monitor.kv_budget_tokens = self.batcher.token_budget()
 
@@ -85,14 +86,22 @@ class SchedulerBase:
         """Retry backoff every real system has: shrink the admission cap."""
         self._oom_shrink = max(0.4, getattr(self, "_oom_shrink", 1.0) * 0.85)
 
+    def notify_dispatch(self) -> None:
+        """A batch actually dispatched: step the backoff recovery.  The
+        loop calls this ONCE per successful dispatch — recovery must not
+        advance on ticks that form no batch (the old ``_cap_scale``
+        mutated on every read, so idle polling silently restored the cap
+        while nothing had been proven safe)."""
+        self._oom_shrink = min(1.0, getattr(self, "_oom_shrink", 1.0) * 1.02)
+
     def _cap_scale(self) -> float:
-        s = getattr(self, "_oom_shrink", 1.0)
-        self._oom_shrink = min(1.0, s * 1.02)      # slow recovery
-        return s
+        """Pure read of the current OOM-shrink factor."""
+        return getattr(self, "_oom_shrink", 1.0)
 
     # -------------------------------------------------- decode admission --
     def _live_tokens(self, req: Request) -> int:
-        return req.prompt_len + req.max_new_tokens
+        return self.batcher.charge_tokens(req.prompt_len
+                                          + req.max_new_tokens)
 
     def admit_decode(self, req: Request) -> None:
         self.monitor.decode_pool += 1
@@ -112,7 +121,8 @@ class BucketServeScheduler(SchedulerBase):
                  sched: SchedulerConfig = SchedulerConfig()):
         super().__init__(cfg, budget, memory_model=sched.memory_model,
                          max_batch=sched.max_batch,
-                         decode_reserve=sched.decode_reserve)
+                         decode_reserve=sched.decode_reserve,
+                         page_size=sched.page_size)
         self.sched = sched
         self.buckets = BucketManager(
             l_max=cfg.max_seq_len, theta=sched.theta,
@@ -170,7 +180,9 @@ class BucketServeScheduler(SchedulerBase):
         tokens = req.prompt_len + req.max_new_tokens
         win = self.cfg.sliding_window or (
             self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
-        return min(tokens, win) if win else tokens
+        if win:
+            tokens = min(tokens, win)
+        return self.batcher.charge_tokens(tokens)
 
     # ------------------------------------------------------- KV transfer --
     def kv_transfer_seconds(self, batch: FormedBatch) -> float:

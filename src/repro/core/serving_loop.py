@@ -150,6 +150,19 @@ class ExecutionBackend(Protocol):
     def free_slots(self) -> int:
         """Free decode slots (only consulted when prefill_needs_slots)."""
 
+    def admit_blocks(self, requests: Sequence[Request]) -> int:
+        """Reserve insert-time KV pages for a PREFIX of the batch; return
+        how many requests got pages (all of them for non-paged backends).
+        The loop re-queues the rest — the block analogue of the
+        decode-slot clamp."""
+
+    def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
+        """Called before each decode iteration: grow every pooled
+        request's pages to cover its next token write, preempting the
+        YOUNGEST requests on pool exhaustion (backend state for victims
+        is already torn down).  The loop re-queues the returned victims
+        via ``requeue=True``.  Non-paged backends return []."""
+
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         """Split a batch's padded prompt into (start, length) spans."""
 
@@ -188,6 +201,8 @@ class ServeResult:
     decode_time_total: float = 0.0
     transfer_time_total: float = 0.0
     interleaved_decode_steps: int = 0    # decode iters run mid-prefill-job
+    peak_pool: int = 0                   # max concurrent decode requests
+    preempt_events: int = 0              # paged-pool mid-decode evictions
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -239,6 +254,8 @@ class _LoopState:
     t_dec: float = 0.0
     t_xfer: float = 0.0
     interleaved: int = 0
+    peak: int = 0
+    preempts: int = 0
 
 
 # ---------------------------------------------------------------- config --
@@ -286,7 +303,8 @@ class ServingLoop:
             oom_events=st.oom, bucketing_overhead_s=overhead,
             prefill_time_total=st.t_pre, decode_time_total=st.t_dec,
             transfer_time_total=st.t_xfer,
-            interleaved_decode_steps=st.interleaved)
+            interleaved_decode_steps=st.interleaved,
+            peak_pool=st.peak, preempt_events=st.preempts)
 
     # ------------------------------------------------------------ shared --
     def _wall_exceeded(self) -> bool:
@@ -315,6 +333,7 @@ class ServingLoop:
             if item[0] <= now and len(self.pool) < self.cfg.decode_slot_cap:
                 self.pool.append(item[1])
                 self.pending_join.remove(item)
+        self.st.peak = max(self.st.peak, len(self.pool))
 
     @staticmethod
     def _live_tokens(pool: Sequence[Request]) -> int:
@@ -365,12 +384,40 @@ class ServingLoop:
                 st.oom += 1
                 self._handle_oom(batch, now)
                 return None, True
+        n_blk = self.backend.admit_blocks(batch.requests)
+        if n_blk < batch.size:                       # KV-page clamp (paged)
+            for r in batch.requests[n_blk:]:
+                self.sched.on_arrival(r, now, requeue=True)
+            if n_blk == 0:
+                return None, False
+            batch = FormedBatch(batch.requests[:n_blk], batch.pad_to,
+                                bucket=batch.bucket)
+        if hasattr(self.sched, "notify_dispatch"):
+            self.sched.notify_dispatch()             # OOM-backoff recovery
         return batch, False
 
     def _account_prefill_batch(self, batch: FormedBatch) -> None:
         fpt = self.backend.flops_per_token
         self.st.useful += fpt * batch.total_tokens
         self.st.padded += fpt * batch.padded_tokens
+
+    def _preempt_for_decode(self, now: float) -> bool:
+        """Paged backends may need to evict the youngest pooled requests
+        to free KV pages for the older ones' next token (DESIGN.md §3).
+        The backend tears down its own state and returns the victims;
+        scheduling state is reset here and they re-enter the queue via
+        the requeue path (restart penalty, no stat double-count)."""
+        victims = self.backend.decode_preempt(self.pool)
+        for r in victims:
+            self.pool.remove(r)
+            self.sched.release_decode(r)
+            r.generated = 0
+            r.first_token = -1.0
+            r.prefill_start = -1.0
+            r.arrival = now + self.cfg.restart_penalty
+            self.sched.on_arrival(r, r.arrival, requeue=True)
+            self.st.preempts += 1
+        return bool(victims)
 
     def _advance_pool(self, end: float) -> None:
         """One token for every pooled request; retire finished ones."""
@@ -419,8 +466,11 @@ class ServingLoop:
                     progressed = True
             # ----------------------------------------- decode executor ----
             if decode_free <= now and self.pool:
-                decode_free = self._run_decode_iter(now)
-                progressed = True
+                if self._preempt_for_decode(now):
+                    progressed = True
+                if self.pool:
+                    decode_free = self._run_decode_iter(now)
+                    progressed = True
 
             if not progressed:
                 cands = [c for c in
@@ -467,6 +517,7 @@ class ServingLoop:
                         or not self.backend.supports_decode:
                     r.finished = end
                     st.done += 1
+                    self.backend.release(r)     # frees admitted KV pages
                 else:
                     # KV allocated AT PREFILL: account it now so the
                     # batcher's Eq. (6) sees in-transfer caches too
@@ -544,6 +595,8 @@ class ServingLoop:
                 pdt = self.backend.prefill_chunk(job, 0)
                 job.next_chunk = 1
                 dt += pdt
+            if self.pool:
+                self._preempt_for_decode(now)
             n_pool = len(self.pool)
             if n_pool:
                 ddt = self.backend.decode_iter(
@@ -575,6 +628,7 @@ class ServingLoop:
                     else:
                         self.pool.append(r)
                         sched.admit_decode(r)
+                st.peak = max(st.peak, len(self.pool))
             clock.advance(end)
 
     def _run_batch_to_completion(self, batch: FormedBatch,

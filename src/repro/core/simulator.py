@@ -27,7 +27,10 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+import math
+
 from repro.models.config import ModelConfig
+from . import paging
 from .batcher import FormedBatch
 from .request import Request
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
@@ -128,27 +131,80 @@ class CostModelBackend:
     enables chunked prefill in the cost model too (incremental quadratic
     attention per chunk); default is whole-prompt prefill, matching the
     paper's setup.
+
+    ``paged=True`` mirrors the real engine's block accounting
+    (core/paging.py): the token KV budget becomes a page budget driven
+    through the same BlockAllocator + admit/extend/preempt policies, so
+    the two backends make identical paged admission decisions (the
+    backend-parity invariant, DESIGN.md §3).
     """
 
     prefill_needs_slots = False
     supports_decode = True
 
     def __init__(self, cost: CostModel, *, kv_budget: float,
-                 chunk_tokens: Optional[int] = None):
+                 chunk_tokens: Optional[int] = None, paged: bool = False,
+                 page_size: int = 128,
+                 kv_pool_tokens: Optional[int] = None,
+                 cache_len: Optional[int] = None):
         self.cost = cost
         self.clock = VirtualClock()
-        self._kv_budget = kv_budget
+        self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.flops_per_token = 2.0 * cost.p_active
+        if paged:
+            # block accounting REPLACES the token-budget OOM check
+            self._kv_budget = math.inf
+            cfg = cost.cfg
+            # the ONE window-cap rule both backends share (parity)
+            self._cap = cfg.attn_cache_len(cache_len or cfg.max_seq_len)
+            self.page_size = page_size
+            total = int(kv_pool_tokens or kv_budget)
+            # mirror the engine's sizing EXACTLY (it reserves one page
+            # of the budget as the dead-slot trash page) so identical
+            # kv_pool_tokens yields identical admission decisions
+            n_pages = total // page_size - 1
+            min_pages = -(-self._cap // page_size)
+            if kv_pool_tokens is not None and n_pages < min_pages:
+                raise ValueError(
+                    f"kv_pool_tokens={kv_pool_tokens} too small: the "
+                    f"paged pool needs at least "
+                    f"{(min_pages + 1) * page_size} tokens (one full "
+                    f"request of {min_pages} pages + the trash page)")
+            self.alloc = paging.BlockAllocator(max(n_pages, min_pages),
+                                               page_size)
+        else:
+            self._kv_budget = kv_budget
 
     def begin(self, requests: Sequence[Request]) -> None:
         self.clock = VirtualClock()
+        if self.paged:
+            self.alloc = paging.BlockAllocator(self.alloc.n_pages,
+                                               self.page_size)
 
     def kv_budget_tokens(self) -> float:
         return self._kv_budget
 
     def free_slots(self) -> int:          # pragma: no cover - not consulted
         return 1 << 30
+
+    # ------------------------------------------------- paged KV mirror ----
+    def _insert_tokens(self, r: Request) -> int:
+        return min(r.prompt_len + 1, self._cap)
+
+    def _decode_tokens(self, r: Request) -> int:
+        return min(r.prompt_len + r.generated, self._cap)
+
+    def admit_blocks(self, requests: Sequence[Request]) -> int:
+        if not self.paged:
+            return len(requests)
+        return paging.admit_blocks(self.alloc, requests, self._insert_tokens)
+
+    def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
+        if not self.paged:
+            return []
+        return paging.extend_for_decode(self.alloc, pool,
+                                        self._decode_tokens)
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         # same gate as the real engine (cfg.chunkable_prefill) so the two
@@ -170,7 +226,8 @@ class CostModelBackend:
         return self.cost.decode_iter_seconds(context_tokens, len(pool))
 
     def release(self, req: Request) -> None:
-        pass
+        if self.paged:
+            self.alloc.release(req.rid)
 
 
 # ------------------------------------------------------------ simulator ---
@@ -191,8 +248,17 @@ class Simulator:
 
     def __init__(self, scheduler, cost: CostModel, *, mode: str = "disagg",
                  decode_slot_cap: int = 256, restart_penalty: float = 0.5,
-                 tick: float = 0.005, chunk_tokens: Optional[int] = None):
+                 tick: float = 0.005, chunk_tokens: Optional[int] = None,
+                 paged: bool = False, page_size: int = 128,
+                 kv_pool_tokens: Optional[int] = None,
+                 cache_len: Optional[int] = None):
         assert mode in ("disagg", "coupled", "static")
+        # static mode runs a batch to completion without per-iteration
+        # decode_preempt extends, so paged accounting would silently
+        # understate the live footprint — refuse the combination
+        assert not (paged and mode == "static"), \
+            "paged KV accounting needs iteration-level decode " \
+            "(disagg/coupled)"
         self.sched = scheduler
         self.cost = cost
         self.mode = mode
@@ -200,7 +266,8 @@ class Simulator:
             else cost.hw.decode_chips + cost.hw.prefill_chips
         self.backend = CostModelBackend(
             cost, kv_budget=cost.kv_budget_tokens(chips),
-            chunk_tokens=chunk_tokens)
+            chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
+            kv_pool_tokens=kv_pool_tokens, cache_len=cache_len)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick))

@@ -14,6 +14,7 @@ import jax
 
 from . import decode_attn as _decode
 from . import flash_prefill as _prefill
+from . import paged_decode_attn as _paged
 from . import wkv6 as _wkv6
 from . import ref
 
@@ -62,3 +63,23 @@ def decode_attention(q, k_cache, v_cache, pos, *, ring=False):
         return flash_decode(q, k_cache, v_cache, pos, ring=ring,
                             interpret=_STATE["interpret"])
     return ref.flash_decode_ref(q, k_cache, v_cache, pos, ring=ring)
+
+
+@functools.partial(jax.jit, static_argnames=("s_len", "ring", "interpret"))
+def paged_flash_decode(q, k_pool, v_pool, block_tables, pos, *, s_len,
+                       ring=False, interpret=True):
+    return _paged.paged_flash_decode(q, k_pool, v_pool, block_tables, pos,
+                                     s_len=s_len, ring=ring,
+                                     interpret=interpret)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *, s_len,
+                           ring=False):
+    """Dispatcher: Pallas paged kernel (scalar-prefetched block tables)
+    or the gather-then-attend jnp reference."""
+    if _STATE["use_pallas"]:
+        return paged_flash_decode(q, k_pool, v_pool, block_tables, pos,
+                                  s_len=s_len, ring=ring,
+                                  interpret=_STATE["interpret"])
+    return ref.paged_flash_decode_ref(q, k_pool, v_pool, block_tables, pos,
+                                      s_len=s_len, ring=ring)

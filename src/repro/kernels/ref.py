@@ -24,6 +24,20 @@ def flash_decode_ref(q, k_cache, v_cache, pos, *, ring=False):
     return out[:, 0] if squeeze else out
 
 
+def paged_flash_decode_ref(q, k_pool, v_pool, block_tables, pos, *,
+                           s_len, ring=False):
+    """Oracle for kernels.paged_decode_attn.paged_flash_decode: gather
+    pages into the contiguous layout, then contiguous decode attention
+    (page placement must not change results)."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    out = attn_ref.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, pos, s_len=s_len,
+        window=s_len if ring else 0)
+    return out[:, 0] if squeeze else out
+
+
 def wkv6_ref(r, k, v, w, u, s0):
     """Oracle for kernels.wkv6 (lax.scan over time)."""
     return rwkv_ref.wkv_scan(r, k, v, w, u, s0)

@@ -1,12 +1,15 @@
 """Serving launcher: BucketServe on the unified serving loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        [--backend jax|sim] [--chunk 128] [--requests 32] \
-        [--dataset mixed] [--data 2 --model 2]
+        [--backend jax|sim] [--chunk 128] [--paged --page-size 128] \
+        [--requests 32] [--dataset mixed] [--data 2 --model 2]
 
 ``--backend jax`` (default) runs the real engine: jitted prefill/decode
 with slot-pool continuous batching; ``--chunk N`` enables chunked
-prefill (decode iterations interleave between N-token prompt chunks).
+prefill (decode iterations interleave between N-token prompt chunks);
+``--paged`` swaps the per-slot KV caches for the shared page pool
+(block-table admission + youngest-preemption, DESIGN.md §3) — the
+scheduler then runs the ceil-to-page Eq. (6) memory model.
 ``--backend sim`` drives the SAME scheduler through the analytic cost
 model instead — both are ExecutionBackends under one ServingLoop
 (core/serving_loop.py), which is how the cost model's scheduling
@@ -35,21 +38,29 @@ from repro.sharding import context as shctx
 from repro.sharding import partition
 
 
+def _sched_config(args) -> SchedulerConfig:
+    return SchedulerConfig(
+        max_batch=args.slots, trigger=args.trigger,
+        memory_model="paged" if args.paged else "sum",
+        page_size=args.page_size)
+
+
 def _run_sim(cfg, args, reqs):
     """Cost-model pass over the identical workload (validation mode)."""
     hw = A100X4
     budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes,
                           n_devices=hw.decode_chips,
                           weight_bytes=cfg.param_count() * 2)
-    sched = BucketServeScheduler(
-        cfg, budget, SchedulerConfig(max_batch=args.slots,
-                                     trigger=args.trigger))
+    sched = BucketServeScheduler(cfg, budget, _sched_config(args))
     sim = Simulator(sched, CostModel(cfg, hw), mode="disagg",
-                    decode_slot_cap=args.slots, chunk_tokens=args.chunk)
+                    decode_slot_cap=args.slots, chunk_tokens=args.chunk,
+                    paged=args.paged, page_size=args.page_size,
+                    kv_pool_tokens=args.pool_tokens)
     res = sim.run(reqs)
     print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
           f"{res.makespan:.2f} virtual s; {res.throughput_tok_s():.0f} tok/s; "
           f"SLO {res.slo_attainment():.2f}; OOM {res.oom_events}; "
+          f"peak pool {res.peak_pool}; preemptions {res.preempt_events}; "
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
 
 
@@ -63,6 +74,15 @@ def main():
     ap.add_argument("--chunk", type=int, default=None,
                     help="chunked-prefill span in tokens (default: whole "
                          "prompt)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV decode pool (block-table admission)")
+    ap.add_argument("--page-size", type=int, default=128,
+                    help="KV page size in tokens (with --paged)")
+    ap.add_argument("--pool-tokens", type=int, default=None,
+                    help="total pooled KV tokens (default: slots x "
+                         "cache_len — the contiguous pool's budget — on "
+                         "the jax backend; the cost model's HBM-derived "
+                         "KV budget on --backend sim)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--dataset", default="mixed")
     ap.add_argument("--rps", type=float, default=8.0)
@@ -108,22 +128,29 @@ def main():
     budget = MemoryBudget(hbm_bytes_per_device=16 * 2 ** 30,
                           n_devices=max(args.data * args.model, 1),
                           weight_bytes=cfg.param_count() * 2)
-    sched = BucketServeScheduler(
-        cfg, budget, SchedulerConfig(max_batch=args.slots,
-                                     trigger=args.trigger))
+    sched = BucketServeScheduler(cfg, budget, _sched_config(args))
     engine = ServingEngine(cfg, params, sched, max_slots=args.slots,
                            cache_len=cfg.max_seq_len,
-                           moe_impl="local", chunk_tokens=args.chunk)
+                           moe_impl="local", chunk_tokens=args.chunk,
+                           paged=args.paged, page_size=args.page_size,
+                           kv_pool_tokens=args.pool_tokens)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
     done = engine.run(max_wall_s=900)
     dt = time.perf_counter() - t0
     toks = sum(r.generated for r in done)
+    paged_info = ""
+    if args.paged:
+        be = engine.backend
+        paged_info = (f"pages: {be.alloc.n_pages} x {be.page_size} tok, "
+                      f"free {be.free_blocks()}; "
+                      f"peak pool {engine.result.peak_pool}; "
+                      f"preemptions {engine.result.preempt_events}; ")
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.1f}s; prefill shapes: {engine.n_prefill_shapes}; "
           f"decode steps interleaved between prefill chunks: "
-          f"{engine.interleaved_decode_steps}; "
+          f"{engine.interleaved_decode_steps}; {paged_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
 
 

@@ -210,6 +210,88 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
     return out.astype(q.dtype)
 
 
+# ------------------------------------------------------------- paged ------
+def gather_paged_kv(pool, block_tables, s_len: int):
+    """Reassemble per-request caches from a shared page pool.
+
+    pool: (n_pages, page, ...) — K, V, or int8 scale pool;
+    block_tables: (B, pages_per_seq) int32; returns (B, s_len, ...).
+    Virtual slot ``s`` of request ``b`` is page ``block_tables[b, s //
+    page]`` offset ``s % page`` (DESIGN.md §3).  The gather reconstructs
+    the EXACT contiguous layout, so downstream attention is bit-identical
+    to the contiguous cache path — page placement cannot change results.
+    """
+    page = pool.shape[1]
+    g = pool[block_tables]                       # (B, n_p, page, ...)
+    B, n_p = g.shape[:2]
+    g = g.reshape((B, n_p * page) + g.shape[3:])
+    return g[:, :s_len]
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, pos, *,
+                           s_len: int, window: int = 0):
+    """Decode attention over a paged KV cache (jnp oracle for the Pallas
+    ``kernels/paged_decode_attn.py`` kernel): gather pages back into the
+    contiguous layout, then run ``decode_attention`` unchanged.  Softmax
+    permutation-invariance is what makes page order irrelevant."""
+    k_cache = gather_paged_kv(k_pool, block_tables, s_len)
+    v_cache = gather_paged_kv(v_pool, block_tables, s_len)
+    return decode_attention(q, k_cache, v_cache, pos, window=window)
+
+
+def self_attn_decode_paged(cfg: ModelConfig, p, x, pos, cache, block_tables,
+                           *, page_size: int, s_len: int, window: int = 0):
+    """One-token decode against the shared page pool.  Mirrors
+    ``self_attn_decode`` except the new token's K/V scatter indirects
+    through the block table: virtual slot ``pos`` (``pos % s_len`` for
+    ring caches) lands in page ``block_tables[b, slot // page]`` offset
+    ``slot % page``.  int8 caches are 4-tuples with scale pools."""
+    B = x.shape[0]
+    quant = cfg.kv_cache_dtype == "int8"
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    cos, sin = layers.rope_angles(pos[:, None], cfg.d_head, cfg.rope_theta)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    if quant:
+        k_pool, v_pool, k_s, v_s = cache
+        kq, ks_new = quantize_kv(k[:, 0])
+        vq, vs_new = quantize_kv(v[:, 0])
+    else:
+        k_pool, v_pool = cache
+        kq, vq = k[:, 0], v[:, 0]
+    n_p = block_tables.shape[1]
+    slot = (pos % s_len) if window else pos
+    # dead slots walk pos past their table; clip keeps the (masked)
+    # write in range — their tables point at the trash page anyway
+    entry = jnp.take_along_axis(
+        block_tables, jnp.clip(slot // page_size, 0, n_p - 1)[:, None],
+        axis=1)[:, 0]                                          # (B,)
+    off = slot % page_size
+    k_pool = k_pool.at[entry, off].set(kq)
+    v_pool = v_pool.at[entry, off].set(vq)
+    if quant:
+        k_s = k_s.at[entry, off].set(ks_new)
+        v_s = v_s.at[entry, off].set(vs_new)
+        with jax.named_scope("vmem_fused:paged_flash_decode_int8"):
+            kd = dequantize_kv(gather_paged_kv(k_pool, block_tables, s_len),
+                               gather_paged_kv(k_s, block_tables, s_len),
+                               q.dtype)
+            vd = dequantize_kv(gather_paged_kv(v_pool, block_tables, s_len),
+                               gather_paged_kv(v_s, block_tables, s_len),
+                               q.dtype)
+        with jax.named_scope("vmem_fused:paged_flash_decode"):
+            out = decode_attention(q, kd, vd, pos, window=window)
+    else:
+        # maps to the Pallas paged kernel (kernels/paged_decode_attn.py)
+        with jax.named_scope("vmem_fused:paged_flash_decode"):
+            out = paged_decode_attention(q, k_pool, v_pool, block_tables,
+                                         pos, s_len=s_len, window=window)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    new_cache = (k_pool, v_pool, k_s, v_s) if quant else (k_pool, v_pool)
+    return out, new_cache
+
+
 # ------------------------------------------------------------ sublayers ---
 def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False):
     ks = jax.random.split(key, 6)

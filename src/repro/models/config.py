@@ -93,6 +93,15 @@ class ModelConfig:
         """Encoder-only backbones have no autoregressive decode step."""
         return not self.is_encoder
 
+    def attn_cache_len(self, cache_len: int) -> int:
+        """Per-request attention-cache length: ``cache_len`` capped by
+        the sliding/local window (ring caches never exceed it).  The ONE
+        definition both execution backends size paged pools from — any
+        drift here breaks backend parity (DESIGN.md §3)."""
+        win = self.sliding_window or (
+            self.local_window if self.arch_type == "hybrid" else 0)
+        return min(cache_len, win) if win else cache_len
+
     @property
     def chunkable_prefill(self) -> bool:
         """Chunked prefill needs a POSITIONAL KV cache (chunks written

@@ -90,9 +90,12 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 
 # ---------------------------------------------------------------- cache ---
 def _attn_cache_len(cfg: ModelConfig, cache_len: int) -> int:
-    win = cfg.sliding_window or (
-        cfg.local_window if cfg.arch_type == "hybrid" else 0)
-    return min(cache_len, win) if win else cache_len
+    return cfg.attn_cache_len(cache_len)
+
+
+def attn_cache_len(cfg: ModelConfig, cache_len: int) -> int:
+    """Public alias: per-request attention-cache length (window-capped)."""
+    return cfg.attn_cache_len(cache_len)
 
 
 def effective_window(cfg: ModelConfig) -> int:
@@ -144,14 +147,82 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
     return {"pos": jnp.zeros((batch,), jnp.int32), "groups": tuple(groups)}
 
 
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Paged KV only applies to self-attention caches: the config must
+    have a decode step and at least one ATTN/MOE block.  Attention-free
+    (RWKV) and encoder-only configs keep the slot pool — their per-slot
+    state is O(1) in sequence length, so paging buys nothing."""
+    if not cfg.has_decode:
+        return False
+    return any(b in (BLOCK_ATTN, BLOCK_MOE)
+               for pat, _ in cfg.block_groups() for b in pat)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                     n_pages: int, page_size: int, dtype=jnp.float32):
+    """Paged decode-pool cache (DESIGN.md §3): self-attention K/V live in
+    a SHARED page pool (reps, n_pages, page_size, Hkv, Dh) indexed
+    through per-slot block tables; everything sequence-length-independent
+    (recurrent state, cross-attention vision KV, positions) stays a
+    per-slot tensor exactly as in ``init_cache``.
+
+    block_tables: (batch, ceil(attn_cache_len/page_size)) int32 — virtual
+    slot ``s`` of pool slot ``b`` is page ``block_tables[b, s//page]``
+    offset ``s % page``.  The caller (engine) owns table contents.
+    """
+    S = _attn_cache_len(cfg, cache_len)
+    n_p = -(-S // page_size)
+    groups = []
+    for pattern, reps in cfg.block_groups():
+        slots = []
+        for btype in pattern:
+            if btype in (BLOCK_ATTN, BLOCK_MOE):
+                kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+                slot = {
+                    "k": jnp.zeros((reps, n_pages, page_size, cfg.n_kv_heads,
+                                    cfg.d_head), kv_dt),
+                    "v": jnp.zeros((reps, n_pages, page_size, cfg.n_kv_heads,
+                                    cfg.d_head), kv_dt),
+                }
+                if cfg.kv_cache_dtype == "int8":
+                    slot["k_s"] = jnp.zeros(
+                        (reps, n_pages, page_size, cfg.n_kv_heads),
+                        jnp.float32)
+                    slot["v_s"] = jnp.zeros(
+                        (reps, n_pages, page_size, cfg.n_kv_heads),
+                        jnp.float32)
+                slots.append(slot)
+            elif btype == BLOCK_CROSS:
+                slots.append({
+                    "k": jnp.zeros((reps, batch, cfg.n_vision_tokens,
+                                    cfg.n_kv_heads, cfg.d_head), dtype),
+                    "v": jnp.zeros((reps, batch, cfg.n_vision_tokens,
+                                    cfg.n_kv_heads, cfg.d_head), dtype),
+                })
+            elif btype == BLOCK_REC:
+                st = rglru.init_state(cfg, batch, dtype)
+                slots.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape), st))
+            elif btype == BLOCK_RWKV:
+                st = rwkv.init_state(cfg, batch, dtype)
+                slots.append(jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (reps,) + x.shape), st))
+        groups.append(tuple(slots))
+    return {"pos": jnp.zeros((batch,), jnp.int32),
+            "block_tables": jnp.zeros((batch, n_p), jnp.int32),
+            "groups": tuple(groups)}
+
+
 # ---------------------------------------------------------- block apply ---
 def _apply_block(cfg: ModelConfig, btype: str, p, x, *, mode: str,
                  positions=None, lengths=None, cache=None, pos=None,
                  vis=None, moe_impl="local", mesh=None, cache_len=0,
-                 chunk_start=None):
+                 chunk_start=None, block_tables=None, page_size=0,
+                 paged_len=0):
     """One block. mode: 'fwd' | 'prefill' | 'chunk' | 'decode'.
     Returns (x, new_cache_slot).  'chunk' continues an existing cache
-    from absolute position ``chunk_start`` (chunked prefill)."""
+    from absolute position ``chunk_start`` (chunked prefill).  A non-None
+    ``block_tables`` switches decode attention to the paged KV pool."""
     win = effective_window(cfg)
     new_cache = cache
 
@@ -164,6 +235,10 @@ def _apply_block(cfg: ModelConfig, btype: str, p, x, *, mode: str,
             if mode == "chunk":
                 a, new_cache = attention.self_attn_chunk(
                     cfg, p["attn"], h, chunk_start, ctuple)
+            elif block_tables is not None:
+                a, new_cache = attention.self_attn_decode_paged(
+                    cfg, p["attn"], h, pos, ctuple, block_tables,
+                    page_size=page_size, s_len=paged_len, window=win)
             else:
                 a, new_cache = attention.self_attn_decode(
                     cfg, p["attn"], h, pos, ctuple, window=win)
@@ -284,7 +359,8 @@ def _project_vision(cfg, params, vision_embeds):
 
 def _run_groups(cfg, params, x, *, mode, positions=None, lengths=None,
                 cache=None, pos=None, vis=None, moe_impl="local", mesh=None,
-                cache_len=0, remat=False, chunk_start=None):
+                cache_len=0, remat=False, chunk_start=None,
+                block_tables=None, page_size=0, paged_len=0):
     new_groups = []
     for gi, (pattern, reps) in enumerate(cfg.block_groups()):
         gparams = params["groups"][gi]
@@ -303,7 +379,8 @@ def _run_groups(cfg, params, x, *, mode, positions=None, lengths=None,
                     cfg, pattern[j], p_j, xx, mode=mode, positions=positions,
                     lengths=lengths, cache=c_j, pos=pos, vis=vis,
                     moe_impl=moe_impl, mesh=mesh, cache_len=cache_len,
-                    chunk_start=chunk_start)
+                    chunk_start=chunk_start, block_tables=block_tables,
+                    page_size=page_size, paged_len=paged_len)
                 new_slots.append(nc if nc is not None else 0)
             return xx, tuple(new_slots)
 
@@ -409,14 +486,29 @@ def prefill_chunk(cfg: ModelConfig, params, tokens, cache, start, lengths,
 
 
 def decode_step(cfg: ModelConfig, params, token, cache, moe_impl="local",
-                mesh=None):
+                mesh=None, page_size: int = 0, paged_len: int = 0):
     """token: (B,) int32 (or (B,d) embeds for encoder-less flows).
-    Returns (logits (B,V), new cache)."""
+    Returns (logits (B,V), new cache).
+
+    Caches from ``init_paged_cache`` (detected by their ``block_tables``
+    leaf) decode against the shared page pool; ``page_size`` must then be
+    the pool's page size and ``paged_len`` the request-level cache length
+    (defaults to the block tables' full virtual span) — both static, so
+    the jitted executable is shared across table contents."""
     x = layers.embed_apply(params["embed"], token[:, None])
     pos = cache["pos"]
+    bt = cache.get("block_tables")
+    if bt is not None:
+        assert page_size > 0, "paged decode_step needs page_size"
+        paged_len = paged_len or bt.shape[1] * page_size
     x, new_groups = _run_groups(cfg, params, x, mode="decode", pos=pos,
-                                cache=cache, moe_impl=moe_impl, mesh=mesh)
+                                cache=cache, moe_impl=moe_impl, mesh=mesh,
+                                block_tables=bt, page_size=page_size,
+                                paged_len=paged_len)
     x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["unembed"]
     logits = layers.unembed_apply(head, x[:, 0])
-    return logits, {"pos": pos + 1, "groups": new_groups}
+    new = {"pos": pos + 1, "groups": new_groups}
+    if bt is not None:
+        new["block_tables"] = bt
+    return logits, new

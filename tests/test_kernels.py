@@ -8,6 +8,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attn import flash_decode
 from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.paged_decode_attn import paged_flash_decode
 from repro.kernels.wkv6 import wkv6
 
 
@@ -74,6 +75,78 @@ def test_flash_decode(shape, dtype):
     want = ref.flash_decode_ref(q, kc, vc, pos, ring=ring)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+PAGED_SHAPES = [
+    # (B, S, H, Hkv, Dh, page, ring)
+    (2, 256, 8, 2, 64, 128, False),   # GQA G=4, divisible
+    (2, 256, 8, 8, 64, 128, False),   # MHA (G=1)
+    (1, 600, 4, 1, 128, 128, False),  # MQA + non-divisible S/page
+    (1, 300, 4, 2, 64, 128, False),   # non-divisible, dead tail page
+    (2, 128, 4, 2, 64, 64, True),     # ring cache, wrapped
+    (2, 96, 8, 2, 64, 64, True),      # ring, non-divisible window/page
+    (1, 512, 16, 2, 80, 256, False),  # large G, odd head dim
+]
+
+
+@pytest.mark.parametrize("shape", PAGED_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode(shape, dtype):
+    """Paged kernel vs. (a) its jnp oracle, (b) the CONTIGUOUS flash
+    decode over the same cache contents: page placement is shuffled, so
+    passing proves allocation layout cannot change results."""
+    B, S, H, Hkv, Dh, page, ring = shape
+    rng = np.random.default_rng(4)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (B, H, Dh), dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, Dh), dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, Dh), dtype)
+    pos = jnp.array([2 * S + 5, S // 3][:B], jnp.int32) if ring else \
+        jnp.array([S - 1, S // 2][:B], jnp.int32)
+
+    # scatter the contiguous cache into a RANDOMLY PERMUTED page pool
+    n_p = -(-S // page)
+    Sp = n_p * page
+    n_pages = B * n_p + 3                       # a few never-used pages
+    perm = rng.permutation(n_pages)[:B * n_p].reshape(B, n_p)
+    kp = jnp.pad(kc, ((0, 0), (0, Sp - S), (0, 0), (0, 0))).reshape(
+        B, n_p, page, Hkv, Dh)
+    vp = jnp.pad(vc, ((0, 0), (0, Sp - S), (0, 0), (0, 0))).reshape(
+        B, n_p, page, Hkv, Dh)
+    k_pool = jnp.zeros((n_pages, page, Hkv, Dh), dtype).at[
+        perm.reshape(-1)].set(kp.reshape(-1, page, Hkv, Dh))
+    v_pool = jnp.zeros((n_pages, page, Hkv, Dh), dtype).at[
+        perm.reshape(-1)].set(vp.reshape(-1, page, Hkv, Dh))
+    bt = jnp.asarray(perm, jnp.int32)
+
+    out = paged_flash_decode(q, k_pool, v_pool, bt, pos, s_len=S,
+                             ring=ring, interpret=True)
+    oracle = ref.paged_flash_decode_ref(q, k_pool, v_pool, bt, pos,
+                                        s_len=S, ring=ring)
+    contig = flash_decode(q, kc, vc, pos, ring=ring, blk_s=page,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(oracle, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(contig, np.float32), **_tol(dtype))
+
+
+def test_paged_gather_is_exact():
+    """gather_paged_kv reconstructs the contiguous cache bit-for-bit —
+    the invariant behind token-id parity between the paged and
+    contiguous engines."""
+    from repro.models.attention import gather_paged_kv
+    rng = np.random.default_rng(5)
+    B, S, Hkv, Dh, page = 3, 200, 2, 64, 64
+    n_p = -(-S // page)
+    kc = rng.normal(size=(B, S, Hkv, Dh)).astype(np.float32)
+    perm = rng.permutation(B * n_p + 2)[:B * n_p].reshape(B, n_p)
+    kp = np.zeros((B, n_p * page, Hkv, Dh), np.float32)
+    kp[:, :S] = kc
+    pool = np.zeros((B * n_p + 2, page, Hkv, Dh), np.float32)
+    pool[perm.reshape(-1)] = kp.reshape(B * n_p, page, Hkv, Dh)
+    got = gather_paged_kv(jnp.asarray(pool), jnp.asarray(perm, jnp.int32), S)
+    assert np.array_equal(np.asarray(got), kc)
 
 
 WKV_SHAPES = [

@@ -1,0 +1,179 @@
+"""Paged KV accounting: BlockAllocator invariants (unit + hypothesis
+property tests) and the shared admission/extension/preemption policies
+both execution backends drive (core/paging.py, DESIGN.md §3).
+
+Invariants:
+  * a page is never assigned to two live requests at once;
+  * free + live == total (no leaks), across any alloc/extend/release
+    interleaving;
+  * a live request's table covers exactly ceil(tokens / page_size)
+    pages;
+  * alloc/extend are all-or-nothing (failed calls change nothing).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.paging import (BlockAllocator, admit_blocks,
+                               extend_for_decode)
+from repro.core.request import Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # unit tests below still run without it
+    HAVE_HYPOTHESIS = False
+
+
+def _req(rid, plen=10, mnt=4, arrival=0.0):
+    return Request(rid=rid, prompt_len=plen, max_new_tokens=mnt,
+                   arrival=arrival)
+
+
+# ------------------------------------------------------------ unit tests --
+class TestBlockAllocator:
+    def test_alloc_covers_ceil_pages(self):
+        a = BlockAllocator(n_pages=10, page_size=16)
+        assert len(a.alloc(0, 1)) == 1
+        assert len(a.alloc(1, 16)) == 1
+        assert len(a.alloc(2, 17)) == 2
+        assert a.free_pages() == 6
+        assert a.live_pages() == 4
+
+    def test_exhaustion_is_all_or_nothing(self):
+        a = BlockAllocator(n_pages=3, page_size=8)
+        assert a.alloc(0, 16) is not None            # 2 pages
+        free_before = a.free_pages()
+        assert a.alloc(1, 17) is None                # needs 3, has 1
+        assert a.free_pages() == free_before         # state unchanged
+        assert not a.holds(1)
+
+    def test_extend_grows_by_pages(self):
+        a = BlockAllocator(n_pages=4, page_size=8)
+        t0 = a.alloc(0, 8)
+        assert a.extend(0, 8) == []                  # still 1 page
+        new = a.extend(0, 9)                         # crosses the boundary
+        assert len(new) == 1 and new[0] not in t0
+        assert a.table(0) == t0 + new
+        assert a.extend(0, 5) == []                  # tables never shrink
+
+    def test_extend_exhaustion_unchanged(self):
+        a = BlockAllocator(n_pages=2, page_size=8)
+        a.alloc(0, 8)
+        a.alloc(1, 8)
+        before = a.table(0)
+        assert a.extend(0, 9) is None
+        assert a.table(0) == before
+
+    def test_release_idempotent_and_recycles(self):
+        a = BlockAllocator(n_pages=2, page_size=8)
+        pages = a.alloc(0, 16)
+        assert a.release(0) == 2
+        assert a.release(0) == 0                     # idempotent
+        assert sorted(a.alloc(1, 16)) == sorted(pages)
+
+    def test_no_double_assignment(self):
+        a = BlockAllocator(n_pages=8, page_size=4)
+        seen = set()
+        for rid in range(4):
+            for p in a.alloc(rid, 8):
+                assert p not in seen
+                seen.add(p)
+
+
+class TestSharedPolicies:
+    def test_admit_blocks_prefix(self):
+        a = BlockAllocator(n_pages=3, page_size=8)
+        reqs = [_req(0, 8), _req(1, 8), _req(2, 8), _req(3, 8)]
+        n = admit_blocks(a, reqs, lambda r: r.prompt_len + 1)  # 2 pages each
+        assert n == 1                                # second one doesn't fit
+        assert a.holds(0) and not a.holds(1)
+
+    def test_extend_preempts_youngest(self):
+        a = BlockAllocator(n_pages=4, page_size=8)
+        old = _req(0, plen=7, arrival=0.0)           # 1 page
+        mid = _req(1, plen=7, arrival=1.0)
+        yng = _req(2, plen=7, arrival=2.0)
+        for r in (old, mid, yng):
+            assert a.alloc(r.rid, r.prompt_len + 1) is not None
+        # every request now needs a 2nd page; only 1 is free -> the
+        # youngest loses its page so the older two can grow
+        for r in (old, mid, yng):
+            r.generated = 3                          # next write crosses
+        victims = extend_for_decode(a, [old, mid, yng],
+                                    lambda r: r.prompt_len + r.generated)
+        assert victims == [yng]
+        assert not a.holds(yng.rid)
+        assert len(a.table(old.rid)) == 2
+        assert len(a.table(mid.rid)) == 2
+
+    def test_extend_no_preempt_when_pages_free(self):
+        a = BlockAllocator(n_pages=8, page_size=8)
+        r = _req(0, plen=7)
+        a.alloc(0, 8)
+        r.generated = 4
+        assert extend_for_decode(a, [r], lambda q: q.prompt_len
+                                 + q.generated) == []
+        assert len(a.table(0)) == 2
+
+    def test_starving_youngest_preempts_itself_not_an_elder(self):
+        """Regression: when only the YOUNGEST request crosses a page
+        boundary and no pages are free, it must evict itself — never an
+        older request (which is closer to finishing)."""
+        a = BlockAllocator(n_pages=2, page_size=8)
+        old = _req(0, plen=7, arrival=0.0)           # 1 page, no growth
+        yng = _req(1, plen=7, arrival=5.0)           # 1 page, will grow
+        a.alloc(old.rid, 8)
+        a.alloc(yng.rid, 8)
+        yng.generated = 3                            # crosses the boundary
+        old.generated = 0
+        victims = extend_for_decode(
+            a, [old, yng],
+            lambda r: r.prompt_len + max(r.generated, 1))
+        assert victims == [yng]
+        assert a.holds(old.rid) and not a.holds(yng.rid)
+
+
+# ----------------------------------------------------- property tests -----
+if HAVE_HYPOTHESIS:
+    ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            st.tuples(st.just("extend"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            st.tuples(st.just("release"), st.integers(0, 7),
+                      st.just(0)),
+        ),
+        min_size=1, max_size=60)
+
+    class TestAllocatorProperties:
+        @settings(deadline=None, max_examples=200)
+        @given(ops=ops, n_pages=st.integers(1, 12),
+               page=st.sampled_from([1, 8, 16, 128]))
+        def test_random_interleavings_hold_invariants(self, ops, n_pages,
+                                                      page):
+            a = BlockAllocator(n_pages, page)
+            tokens = {}
+            for op, rid, tok in ops:
+                if op == "alloc":
+                    if a.holds(rid):
+                        continue
+                    if a.alloc(rid, tok) is not None:
+                        tokens[rid] = tok
+                elif op == "extend":
+                    if not a.holds(rid):
+                        continue
+                    if a.extend(rid, tok) is not None:
+                        tokens[rid] = max(tokens[rid], tok)
+                else:
+                    a.release(rid)
+                    tokens.pop(rid, None)
+                # never double-assign a page
+                assigned = [p for r in tokens for p in a.table(r)]
+                assert len(assigned) == len(set(assigned))
+                # no leaks: free + live == total
+                assert a.free_pages() + a.live_pages() == n_pages
+                # tables cover exactly ceil(tokens / page) pages
+                for r, tk in tokens.items():
+                    assert len(a.table(r)) == -(-tk // page)
