@@ -1,0 +1,78 @@
+"""Cross-request prefix cache: cold vs shared-prefix throughput table.
+
+Beyond-paper table (PR 3, DESIGN.md §3 "Prefix sharing"): the paged
+cost model serves the SAME shared-prefix workload (N system prompts x
+Zipf reuse, data/workload.py) twice — prefix cache off, then on — and
+reports prompt tokens actually prefilled, hit rate, pages saved and
+throughput.
+
+CI gate: the cached run must prefill STRICTLY FEWER total prompt
+tokens than the cold run (a regression here means the radix lookup or
+the chunk-plan skip rotted); the harness (benchmarks/run.py) exits
+nonzero on the raised AssertionError.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.batcher import MemoryBudget
+from repro.core.request import TaskType
+from repro.core.scheduler import BucketServeScheduler, SchedulerConfig
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.data.workload import WorkloadSpec, generate
+
+from .common import CFG, emit
+
+PAGE = 128
+
+
+def _run(spec: WorkloadSpec, *, prefix_cache: bool, slots: int):
+    reqs = generate(spec)
+    budget = MemoryBudget(hbm_bytes_per_device=A100X4.hbm_bytes,
+                          n_devices=A100X4.decode_chips,
+                          weight_bytes=CFG.param_count() * 2)
+    sched = BucketServeScheduler(CFG, budget, SchedulerConfig(
+        max_batch=slots, memory_model="paged", page_size=PAGE))
+    sim = Simulator(sched, CostModel(CFG, A100X4), mode="disagg",
+                    decode_slot_cap=slots, paged=True, page_size=PAGE,
+                    prefix_cache=prefix_cache)
+    t0 = time.perf_counter()
+    res = sim.run(reqs)
+    return res, time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> None:
+    n = 48 if quick else 200
+    spec = WorkloadSpec(dataset="alpaca", rps=1e6, n_requests=n,
+                        max_model_len=CFG.max_seq_len,
+                        task_type=TaskType.OFFLINE,
+                        prefix_groups=4, prefix_tokens=1024,
+                        prefix_zipf=1.2, vocab_size=CFG.vocab_size,
+                        max_new_tokens=32 if quick else 0)
+    rows = []
+    by_mode = {}
+    for cached in (False, True):
+        res, wall = _run(spec, prefix_cache=cached, slots=32)
+        by_mode[cached] = res
+        rows.append([
+            "prefix_cache", "cached" if cached else "cold", n,
+            res.prefill_tokens_processed, res.prefill_tokens_skipped,
+            f"{res.prefix_hit_rate():.3f}", res.prefix_pages_saved,
+            res.shared_pages_peak,
+            f"{res.output_tok_s():.1f}", f"{res.makespan:.2f}",
+            f"{wall:.1f}"])
+    emit(rows, ["table", "mode", "n", "prefill_tokens", "tokens_skipped",
+                "hit_rate", "pages_saved", "shared_pages_peak",
+                "out_tok_s", "makespan_s", "wall_s"])
+    cold = by_mode[False]
+    cached = by_mode[True]
+    assert cached.prefill_tokens_processed < cold.prefill_tokens_processed, \
+        (f"prefix-cache run prefilled {cached.prefill_tokens_processed} "
+         f">= cold run's {cold.prefill_tokens_processed} prompt tokens — "
+         "the prefix cache saved nothing")
+    red = 1 - cached.prefill_tokens_processed / max(
+        cold.prefill_tokens_processed, 1)
+    print(f"claim,prefill_token_reduction,{red:.3f}")
+    print(f"claim,throughput_ratio,"
+          f"{cached.output_tok_s() / max(cold.output_tok_s(), 1e-9):.3f}")
+    print()

@@ -15,7 +15,7 @@ import sys
 import time
 
 from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
-               fig6_overhead, kv_quant, roofline, waste_model)
+               fig6_overhead, kv_quant, prefix_cache, roofline, waste_model)
 
 TABLES = {
     "fig5_offline": fig5_offline.main,     # Fig. 5a/5b
@@ -25,6 +25,7 @@ TABLES = {
     "waste_model": waste_model.main,       # Eqs. (2)-(4)
     "arch_sweep": arch_sweep.main,         # beyond-paper: all 10 archs
     "kv_quant": kv_quant.main,             # beyond-paper: int8 KV cache
+    "prefix_cache": prefix_cache.main,     # beyond-paper: prefix sharing
     "roofline": roofline.main,             # §Roofline (dry-run derived)
 }
 

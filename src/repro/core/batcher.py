@@ -129,11 +129,14 @@ class DynamicBatchController:
         m = self.pad_multiple
         return -(-n // m) * m if n else 0
 
-    def charge_tokens(self, cache_tokens: int) -> int:
+    def charge_tokens(self, cache_tokens: int, shared_tokens: int = 0) -> int:
         """Tokens a cache of ``cache_tokens`` is CHARGED against the
         budget: exact under "sum"/"padded" accounting, ceil-to-page under
-        "paged" (a request pins whole pages — Eq. (6) on page granules)."""
+        "paged" (a request pins whole pages — Eq. (6) on page granules).
+        ``shared_tokens`` (page-aligned, paged model only) is the
+        prefix-cache hit: shared pages are charged ONCE by whoever first
+        materialized them, so a sharer pays only its private suffix."""
         if self.memory_model != "paged":
             return cache_tokens
         p = self.page_size
-        return -(-cache_tokens // p) * p
+        return max(-(-cache_tokens // p) * p - shared_tokens, 0)

@@ -33,6 +33,18 @@ corrupt a live request's pages.  Shapes stay static: the pool and the
 (slots, pages_per_seq) block table are fixed tensors, so ONE decode
 executable serves every allocation layout.
 
+Cross-request prefix cache (``prefix_cache=True``, DESIGN.md §3
+"Prefix sharing"): admission matches each prompt against a radix index
+of token-id page chunks (``core/prefix_cache.py``); matched FULL pages
+are attached to the request's block table BY REFERENCE (the allocator
+refcounts pages) and chunked prefill resumes after the cached prefix —
+the batch cache is seeded from the pool with the exact inverse of the
+insert scatter, so hit-path token ids are bit-identical to a cold run.
+At insert, shared prefix pages are never re-scattered; freshly
+prefilled full prompt pages are pinned into the index for future hits,
+and LRU zero-ref prefixes are evicted when admission or decode
+starves.
+
 Chunked prefill (DESIGN.md §2): long prompts are split into
 ``chunk_tokens``-sized spans; the serving loop interleaves decode
 iterations between spans, so a 2k-token prefill no longer stalls every
@@ -52,9 +64,10 @@ from repro.models import transformer as tfm
 from repro.models.config import BLOCK_ATTN, BLOCK_MOE, ModelConfig
 from . import paging
 from .batcher import FormedBatch
+from .prefix_cache import PrefixCache
 from .request import Request
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
-                           WallClock, plan_chunks)
+                           WallClock, batch_prefix_skip, plan_chunks)
 
 
 class JaxEngineBackend:
@@ -67,7 +80,8 @@ class JaxEngineBackend:
                  time_scale: float = 1.0,
                  chunk_tokens: Optional[int] = None,
                  paged: bool = False, page_size: int = 128,
-                 kv_pool_tokens: Optional[int] = None):
+                 kv_pool_tokens: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -78,6 +92,13 @@ class JaxEngineBackend:
         self.supports_decode = cfg.has_decode
         self.flops_per_token = 2.0 * cfg.active_param_count()
         self.paged = paged
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            assert paged, "prefix cache rides on the paged KV pool"
+            assert cfg.prefix_cacheable, \
+                f"{cfg.name}: prefix cache needs chunk-resumable prefill " \
+                "and purely attention-paged state (no recurrent carries)"
+            self.prefix_cache = PrefixCache(page_size)
 
         if paged:
             assert tfm.supports_paged_decode(cfg), \
@@ -152,10 +173,7 @@ class JaxEngineBackend:
     # --------------------------------------------------------- protocol --
     def begin(self, requests: Sequence[Request]) -> None:
         for r in requests:
-            if r.tokens is None:
-                rng = np.random.default_rng(r.rid)
-                r.tokens = rng.integers(
-                    0, self.cfg.vocab_size, r.prompt_len).astype(np.int32)
+            r.materialize_tokens(self.cfg.vocab_size)
             self.outputs[r.rid] = []
         self.clock.start()
 
@@ -182,16 +200,22 @@ class JaxEngineBackend:
         itself goes through ``admit_blocks``."""
         return self.alloc.free_pages() if self.paged else 1 << 30
 
+    def _prompt_tokens(self, r: Request):
+        return r.tokens[:r.prompt_len]
+
     def admit_blocks(self, requests: Sequence[Request]) -> int:
         if not self.paged:
             return len(requests)
-        return paging.admit_blocks(self.alloc, requests, self._insert_tokens)
+        return paging.admit_blocks(self.alloc, requests, self._insert_tokens,
+                                   cache=self.prefix_cache,
+                                   tokens_of=self._prompt_tokens)
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
         if not self.paged:
             return []
         victims = paging.extend_for_decode(self.alloc, pool,
-                                           self._decode_tokens)
+                                           self._decode_tokens,
+                                           cache=self.prefix_cache)
         for v in victims:
             slot = self._slot_of.pop(v.rid, None)
             if slot is not None:
@@ -212,7 +236,9 @@ class JaxEngineBackend:
         total = max(batch.pad_to, 8)     # min real-tensor prompt width
         c = self.chunk_tokens if tfm.supports_chunked_prefill(self.cfg) \
             else None
-        return plan_chunks(total, c)
+        skip = batch_prefix_skip(batch) if self.prefix_cache is not None \
+            else 0
+        return plan_chunks(total, c, skip=skip)
 
     def transfer_seconds(self, batch: FormedBatch) -> float:
         return 0.0            # prefill writes straight into the slot pool
@@ -221,6 +247,10 @@ class JaxEngineBackend:
         reqs = job.batch.requests
         B = len(reqs)
         start, clen = job.chunks[idx]
+        # chunk-mode execution whenever the plan is split OR starts past
+        # position 0 (a cached prefix was skipped — the single remaining
+        # span still continues an existing cache)
+        chunked = len(job.chunks) > 1 or job.chunks[0][0] > 0
         h = job.handle
         if h is None:
             total = job.chunks[-1][0] + job.chunks[-1][1]
@@ -233,10 +263,14 @@ class JaxEngineBackend:
             h = job.handle = {
                 "toks": toks, "lens": jnp.asarray(lens), "np_lens": lens,
                 "cache": (tfm.init_cache(self.cfg, B, self.cache_len)
-                          if len(job.chunks) > 1 else None),
+                          if chunked else None),
                 "first": np.zeros((B,), np.int64),
             }
-        if len(job.chunks) == 1:
+            if job.chunks[0][0] > 0:
+                # seed the batch cache's prefix region from the shared
+                # page pool before the first (post-prefix) chunk runs
+                self._seed_prefix(h, reqs)
+        if not chunked:
             fn = self._prefill_fn(clen, B)
             logits, cache = fn(self.params, jnp.asarray(h["toks"]), h["lens"])
             h["first"][:] = np.asarray(jnp.argmax(logits, -1))
@@ -251,16 +285,59 @@ class JaxEngineBackend:
             if fin.any():
                 h["first"][fin] = np.asarray(jnp.argmax(logits, -1))[fin]
         if idx == len(job.chunks) - 1:
-            if len(job.chunks) > 1:
+            if chunked:
                 h["cache"] = {"pos": h["lens"].astype(jnp.int32),
                               "groups": h["cache"]["groups"]}
             self._finish_prefill(job)
         return 0.0            # wall backend: the loop reads the clock
 
+    def _seed_prefix(self, h, reqs: Sequence[Request]) -> None:
+        """Copy each row's cached-prefix K/V out of the shared page pool
+        into the batch prefill cache, so chunked prefill can resume past
+        it.  One gather per cache leaf for the whole batch; the gather is
+        the exact inverse of ``_insert_slots_paged``'s scatter, so seeded
+        values are bit-identical to a cold recompute."""
+        page, maxp = self.page_size, self.pages_per_seq
+        B = len(reqs)
+        idx = np.full((B, maxp), self.trash_page, np.int32)
+        plen = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            npg = r.prefix_hit_tokens // page
+            if npg:
+                idx[i, :npg] = self.alloc.table(r.rid)[:npg]
+                plen[i] = npg * page
+        if not plen.any():
+            return
+        idxj = jnp.asarray(idx)
+        S = self.s_attn
+        mask = jnp.arange(S)[None, :] < jnp.asarray(plen)[:, None]  # (B,S)
+
+        def seed(cache_leaf, pool_leaf):
+            g = pool_leaf[:, idxj]               # (reps, B, maxp, page, ...)
+            g = g.reshape(g.shape[:2] + (maxp * page,) + g.shape[4:])
+            g = g[:, :, :S]
+            m = mask.reshape((1, B, S) + (1,) * (g.ndim - 3))
+            return jnp.where(m, g, cache_leaf)
+
+        new_groups = []
+        for gi, (pattern, reps) in enumerate(self.cfg.block_groups()):
+            slots_out = []
+            for j, btype in enumerate(pattern):
+                cslot = h["cache"]["groups"][gi][j]
+                if btype in (BLOCK_ATTN, BLOCK_MOE):
+                    pslot = self.pool_cache["groups"][gi][j]
+                    slots_out.append({k: seed(cslot[k], pslot[k])
+                                      for k in cslot})
+                else:       # unreachable under the prefix_cacheable gate
+                    slots_out.append(cslot)
+            new_groups.append(tuple(slots_out))
+        h["cache"] = {"pos": h["cache"]["pos"], "groups": tuple(new_groups)}
+
     def _finish_prefill(self, job: PrefillJob) -> None:
         """First tokens out; batched slot insertion for continuing rows."""
         h = job.handle
-        slots, rows, firsts, tables = [], [], [], []
+        slots, rows, firsts, tables, shared = [], [], [], [], []
+        to_register = []
         free = iter(i for i, r in enumerate(self.slot_req) if r is None)
         for i, r in enumerate(job.batch.requests):
             tok = int(h["first"][i])
@@ -280,12 +357,23 @@ class JaxEngineBackend:
                 self._bt_host[slot] = self.trash_page
                 self._bt_host[slot, :len(t)] = t
                 tables.append(t)
+                # shared prefix pages already hold this KV — never
+                # re-scattered (they may be read by other live requests)
+                shared.append(r.prefix_hit_tokens // self.page_size
+                              if self.prefix_cache is not None else 0)
+                if self.prefix_cache is not None:
+                    to_register.append((r, t))
         if slots:
             if self.paged:
                 self._insert_slots_paged(h["cache"], slots, rows, firsts,
-                                         tables)
+                                         tables, shared)
             else:
                 self._insert_slots(h["cache"], slots, rows, firsts)
+        # index full prompt pages AFTER their KV is physically in the
+        # pool — a concurrent later batch may hit them immediately
+        for r, t in to_register:
+            self.prefix_cache.register(self.alloc,
+                                       self._prompt_tokens(r), t)
         job.handle = None
 
     def _insert_slots(self, batch_cache, slots: List[int], rows: List[int],
@@ -305,18 +393,25 @@ class JaxEngineBackend:
 
     def _insert_slots_paged(self, batch_cache, slots: List[int],
                             rows: List[int], firsts: List[int],
-                            tables: List[List[int]]) -> None:
+                            tables: List[List[int]],
+                            shared: Optional[List[int]] = None) -> None:
         """Scatter prefilled caches into the page pool: attention K/V
         rows are chopped into page-sized spans and written to each
         request's allocated pages (one scatter per leaf for the whole
         batch); per-slot leaves (recurrent state, vision KV, positions)
-        use the contiguous slot scatter unchanged."""
+        use the contiguous slot scatter unchanged.  The first
+        ``shared[i]`` pages of a table are a cached prefix that ALREADY
+        lives in the pool — skipped, so shared pages are written exactly
+        once, by their original owner."""
         sl = jnp.asarray(slots, jnp.int32)
         rw = jnp.asarray(rows, jnp.int32)
         pos = self.pool_cache["pos"].at[sl].set(batch_cache["pos"][rw])
         dst, srow, spg = [], [], []
-        for row, t in zip(rows, tables):
+        for k, (row, t) in enumerate(zip(rows, tables)):
+            skip_pages = shared[k] if shared else 0
             for j, pg in enumerate(t):
+                if j < skip_pages:
+                    continue
                 dst.append(pg)
                 srow.append(row)
                 spg.append(j)
@@ -397,7 +492,8 @@ class ServingEngine:
                  moe_impl: str = "local", time_scale: float = 1.0,
                  chunk_tokens: Optional[int] = None, paged: bool = False,
                  page_size: int = 128,
-                 kv_pool_tokens: Optional[int] = None):
+                 kv_pool_tokens: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -405,7 +501,7 @@ class ServingEngine:
             cfg, params, max_slots=max_slots, cache_len=cache_len,
             moe_impl=moe_impl, time_scale=time_scale,
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
-            kv_pool_tokens=kv_pool_tokens)
+            kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots))
         self.result: Optional[ServeResult] = None

@@ -21,6 +21,8 @@ class Snapshot:
     mean_seq_len: float
     n_buckets: int
     kv_util: float
+    prefix_hit_rate: float = 0.0
+    prefix_pages_saved: int = 0
 
 
 class GlobalMonitor:
@@ -35,6 +37,12 @@ class GlobalMonitor:
         self.queue_len = 0
         self.n_buckets = 1
         self.kv_budget_tokens = 1.0
+        # cross-request prefix cache (core/prefix_cache.py): admission
+        # hit accounting, fed by the ServingLoop per admitted request
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefix_pages_saved = 0
 
     # ------------------------------------------------------------ events --
     def on_arrival(self, t: float, seq_len: int) -> None:
@@ -53,6 +61,16 @@ class GlobalMonitor:
 
     def on_batch(self, latency_s: float) -> None:
         self.batch_lat.append(latency_s)
+
+    def on_prefix_lookup(self, hit_tokens: int, page_size: int) -> None:
+        """One admitted request matched against the prefix cache:
+        ``hit_tokens`` prompt tokens (page-aligned, 0 = cold) will be
+        served from shared pages instead of re-prefilled."""
+        self.prefix_lookups += 1
+        if hit_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_hit_tokens += hit_tokens
+            self.prefix_pages_saved += hit_tokens // max(page_size, 1)
 
     # ------------------------------------------------------------- stats --
     def arrival_rate(self) -> float:
@@ -74,9 +92,13 @@ class GlobalMonitor:
     def kv_util(self) -> float:
         return min(1.0, self.in_flight_tokens / max(self.kv_budget_tokens, 1))
 
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
+
     def snapshot(self, t: float) -> Snapshot:
         s = Snapshot(t, self.queue_len, self.decode_pool,
                      self.in_flight_tokens, self.arrival_rate(),
-                     self.mean_seq_len(), self.n_buckets, self.kv_util())
+                     self.mean_seq_len(), self.n_buckets, self.kv_util(),
+                     self.prefix_hit_rate(), self.prefix_pages_saved)
         self.history.append(s)
         return s

@@ -14,11 +14,18 @@ per-slot ``cache_len`` preallocation, which is what lets a 40-token
 Alpaca request and a 32k LongBench request share one HBM pool without
 the short request paying for the long one's worst case.
 
+Pages are REFCOUNTED (PR 3): a page may appear in several live block
+tables at once (cross-request prefix sharing, core/prefix_cache.py)
+and may additionally be pinned by the prefix cache itself.  A page
+returns to the free list only when its reference count hits zero, so
+releasing one sharer can never corrupt another's cache.
+
 Invariants (property-tested in tests/test_paging.py):
-  * a page is never assigned to two live requests at once;
-  * free + live == total (no leaks);
+  * a page's refcount always equals (#live tables holding it) + (#pins);
+  * free + unique-live == total (no leaks, shared pages counted ONCE);
   * a live request's table holds exactly ``ceil(tokens / page_size)``
-    pages.
+    pages;
+  * alloc/extend are all-or-nothing; release is idempotent per rid.
 """
 from __future__ import annotations
 
@@ -27,13 +34,19 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 
 class BlockAllocator:
-    """Free-list allocator of fixed-size KV pages with block tables.
+    """Free-list allocator of fixed-size KV pages with refcounts and
+    block tables.
 
     Token-level API: callers say how many tokens a request holds and the
     allocator keeps its table at exactly ``ceil(tokens / page_size)``
     pages.  ``alloc``/``extend`` are all-or-nothing — on exhaustion they
     return None and the allocator state is unchanged (no partial grabs),
     so callers can preempt and retry without unwinding.
+
+    ``alloc(..., shared=pages)`` prepends already-live pages (a cached
+    prefix) to the new table, bumping their refcounts instead of popping
+    the free list — the request pays only for its private suffix pages.
+    ``pin``/``unpin`` are the prefix cache's own references.
     """
 
     def __init__(self, n_pages: int, page_size: int):
@@ -43,6 +56,7 @@ class BlockAllocator:
         # LIFO free list: released pages are reused first (locality)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._tables: Dict[int, List[int]] = {}
+        self._refs: Dict[int, int] = {}          # page -> live refcount
 
     # ----------------------------------------------------------- queries --
     def pages_for(self, tokens: int) -> int:
@@ -52,7 +66,22 @@ class BlockAllocator:
         return len(self._free)
 
     def live_pages(self) -> int:
-        return sum(len(t) for t in self._tables.values())
+        """UNIQUE live pages (shared pages counted once): the quantity
+        that satisfies free + live == total."""
+        return len(self._refs)
+
+    def refs(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def shared_pages(self) -> int:
+        """Pages referenced more than once (table+table or table+pin)."""
+        return sum(1 for c in self._refs.values() if c >= 2)
+
+    def reclaimable(self, rid: int) -> int:
+        """Pages that would actually return to the free list if ``rid``
+        were released NOW (refcount 1 — no other sharer, no cache pin)."""
+        return sum(1 for p in self._tables.get(rid, ())
+                   if self._refs.get(p) == 1)
 
     def table(self, rid: int) -> List[int]:
         return list(self._tables.get(rid, ()))
@@ -61,85 +90,168 @@ class BlockAllocator:
         return rid in self._tables
 
     # ------------------------------------------------------------- edits --
-    def alloc(self, rid: int, tokens: int) -> Optional[List[int]]:
-        """Admit ``rid`` with ``tokens`` live tokens.  Returns its block
-        table, or None if the pool cannot hold it (state unchanged)."""
+    def _pop_free(self) -> int:
+        p = self._free.pop()
+        self._refs[p] = 1
+        return p
+
+    def _unref(self, page: int) -> bool:
+        """Drop one reference; True if the page returned to the free
+        list (count hit zero)."""
+        c = self._refs[page] - 1
+        if c == 0:
+            del self._refs[page]
+            self._free.append(page)
+            return True
+        self._refs[page] = c
+        return False
+
+    def alloc(self, rid: int, tokens: int,
+              shared: Optional[Sequence[int]] = None) -> Optional[List[int]]:
+        """Admit ``rid`` with ``tokens`` live tokens.  ``shared`` pages
+        (a cached prefix, already live/pinned) are prepended to the table
+        by reference — only the remaining pages come from the free list.
+        Returns the block table, or None if the pool cannot hold it
+        (state unchanged, including refcounts)."""
         assert rid not in self._tables, f"rid {rid} already live"
+        shared = list(shared or ())
         need = self.pages_for(tokens)
-        if need > len(self._free):
+        assert need >= len(shared), \
+            f"shared prefix ({len(shared)} pages) exceeds need ({need})"
+        if need - len(shared) > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(need)]
+        for p in shared:
+            assert self._refs.get(p, 0) > 0, \
+                f"shared page {p} is not live (evicted prefix?)"
+            self._refs[p] += 1
+        pages = shared + [self._pop_free()
+                          for _ in range(need - len(shared))]
         self._tables[rid] = pages
         return list(pages)
 
     def extend(self, rid: int, tokens: int) -> Optional[List[int]]:
         """Grow ``rid``'s table to cover ``tokens`` tokens.  Returns the
         NEWLY added pages ([] if already covered), or None on exhaustion
-        (state unchanged).  Tables never shrink mid-flight."""
+        (state unchanged).  Tables never shrink mid-flight.  New pages
+        are always private (refcount 1) — growth happens past the
+        prompt, where no sharing is possible."""
         assert rid in self._tables, f"rid {rid} not live"
         have = self._tables[rid]
         need = max(self.pages_for(tokens), len(have))
         grow = need - len(have)
         if grow > len(self._free):
             return None
-        new = [self._free.pop() for _ in range(grow)]
+        new = [self._pop_free() for _ in range(grow)]
         have.extend(new)
         return new
 
     def release(self, rid: int) -> int:
-        """Free all of ``rid``'s pages; returns how many (0 if unknown —
-        release is idempotent so preemption/finish races are harmless)."""
+        """Drop ``rid``'s references; returns how many pages actually
+        returned to the free list (0 if unknown — release is idempotent
+        so preemption/finish races are harmless; shared pages survive
+        their co-owners)."""
         pages = self._tables.pop(rid, None)
         if pages is None:
             return 0
-        self._free.extend(pages)
-        return len(pages)
+        return sum(1 for p in pages if self._unref(p))
+
+    # ------------------------------------------------- prefix-cache pins --
+    def pin(self, page: int) -> None:
+        """Extra reference held by the prefix cache: the page survives
+        its writer's release and stays addressable for future hits."""
+        assert self._refs.get(page, 0) > 0, \
+            f"pin target {page} is not live"
+        self._refs[page] += 1
+
+    def unpin(self, page: int) -> bool:
+        """Drop a cache pin; True if the page was freed (no live table
+        referenced it)."""
+        assert self._refs.get(page, 0) > 0, f"unpin of dead page {page}"
+        return self._unref(page)
 
 
 # ------------------------------------------------------- shared policies --
 def admit_blocks(alloc: BlockAllocator, requests: Sequence,
-                 insert_tokens: Callable[[object], int]) -> int:
+                 insert_tokens: Callable[[object], int],
+                 cache=None, tokens_of=None) -> int:
     """Admission gate: allocate insert-time pages for a PREFIX of the
     batch; returns how many requests were admitted.  ``insert_tokens``
     maps a request to the tokens its cache holds right after prefill
     (prompt + the first decode write, window-capped).  The loop re-queues
-    the rest — the block analogue of the decode-slot clamp."""
+    the rest — the block analogue of the decode-slot clamp.
+
+    With a :class:`~repro.core.prefix_cache.PrefixCache` (``cache`` +
+    ``tokens_of``), each request's prompt is first matched against the
+    radix index: matched pages are attached by REFERENCE (refcount++)
+    and only the uncached suffix is charged to the free list.  On
+    exhaustion, LRU zero-ref cached prefixes are evicted before giving
+    up — admission starvation reclaims cold cache before it blocks."""
     n = 0
     for r in requests:
-        if alloc.alloc(r.rid, insert_tokens(r)) is None:
+        shared: List[int] = []
+        hit_tokens = 0
+        if cache is not None:
+            shared, hit_tokens = cache.lookup(tokens_of(r))
+        while True:
+            got = alloc.alloc(r.rid, insert_tokens(r), shared=shared)
+            if got is not None or cache is None:
+                break
+            short = (alloc.pages_for(insert_tokens(r)) - len(shared)
+                     - alloc.free_pages())
+            if cache.evict(alloc, short, protect=shared) == 0:
+                break
+        if got is None:
             break
+        if cache is not None:
+            r.prefix_hit_tokens = hit_tokens
+            cache.note_admit(alloc, hit_tokens)
         n += 1
     return n
 
 
 def extend_for_decode(alloc: BlockAllocator, pool: Sequence,
-                      decode_tokens: Callable[[object], int]) -> List:
+                      decode_tokens: Callable[[object], int],
+                      cache=None) -> List:
     """Pre-decode page extension with preemption: grow every pooled
-    request's table to cover its next token write; on exhaustion evict
-    the YOUNGEST pooled request (latest arrival, then highest rid) and
-    retry.  Only requests strictly younger than the one being extended
-    are eviction candidates — if the starving request IS the youngest,
-    it preempts itself rather than robbing an older request of its
-    pages.  Oldest-first processing therefore guarantees the head of
+    request's table to cover its next token write; on exhaustion free
+    pages in cheapness order — (1) evict an LRU zero-ref cached prefix
+    (nobody loses work), then (2) preempt a strictly YOUNGER pooled
+    request, preferring the one whose release RECLAIMS the most pages
+    (a victim whose pages are all shared frees nothing and is never
+    picked), tie-broken by youngest (latest arrival, then highest rid).
+    If the starving request is the youngest — or no younger victim can
+    free a page — it preempts itself rather than robbing an older
+    request.  Oldest-first processing therefore guarantees the head of
     the pool always progresses (no livelock).  Returns the victims
-    (their pages already released); the caller re-queues them."""
+    (their pages already released); the caller re-queues them.
+
+    Victim membership is tracked in a rid-keyed set — the old
+    ``c not in victims`` list scan made this O(n^2) in pool size."""
     victims: List = []
+    victim_rids = set()
     order = sorted(pool, key=lambda r: (r.arrival, r.rid))
     for r in order:
-        if r in victims:
+        if r.rid in victim_rids:
             continue
         while alloc.extend(r.rid, decode_tokens(r)) is None:
-            younger = [c for c in order if c not in victims and c is not r
-                       and alloc.holds(c.rid)
-                       and (c.arrival, c.rid) > (r.arrival, r.rid)]
+            if cache is not None and cache.evict_one(alloc):
+                continue                     # freed a cached page; retry
+            younger = [c for c in order if c.rid not in victim_rids
+                       and c is not r and alloc.holds(c.rid)
+                       and (c.arrival, c.rid) > (r.arrival, r.rid)
+                       and alloc.reclaimable(c.rid) > 0]
             if not younger:
-                # r is the youngest live request and still starves: it
-                # preempts ITSELF (never an older one — they are closer
-                # to finishing and have consumed more work)
+                # r is the youngest live request (or nobody younger can
+                # free a page) and still starves: it preempts ITSELF —
+                # never an older one (they are closer to finishing and
+                # have consumed more work)
                 alloc.release(r.rid)
                 victims.append(r)
+                victim_rids.add(r.rid)
                 break
-            v = max(younger, key=lambda c: (c.arrival, c.rid))
+            v = max(younger, key=lambda c: (alloc.reclaimable(c.rid),
+                                            c.arrival, c.rid))
             alloc.release(v.rid)
             victims.append(v)
+            victim_rids.add(v.rid)
     return victims

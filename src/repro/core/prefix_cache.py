@@ -1,0 +1,217 @@
+"""Cross-request prefix cache: radix index over refcounted KV pages.
+
+BucketServe's bucket batching cuts padding waste; under realistic
+agentic traffic (shared system prompts, few-shot headers) the biggest
+waste LEFT is re-prefilling identical prefixes per request.  PR 2's
+block tables already let two requests point at the same physical page —
+this module adds the machinery that exploits it (DESIGN.md §3, "Prefix
+sharing"; Apt-Serve arXiv 2504.07494 reports large admission gains from
+exactly this reuse):
+
+* a RADIX/TRIE index keyed on token-id chunks of ``page_size``: node
+  depth d holds the physical page whose KV covers prompt positions
+  ``[d*page, (d+1)*page)`` for that exact token path.  Page content is
+  a pure function of the token prefix (RoPE is applied at write time
+  with absolute positions), so any request whose prompt walks the same
+  path can reference the same page;
+* only FULL pages are ever indexed — the final partial page of a prompt
+  is always a private page written by the owner's prefill.  This is the
+  copy-on-write rule degenerate-cased away: a shared page is immutable
+  by construction, and the mutable tail is never shared;
+* the cache holds its own PIN (refcount) on every indexed page, so a
+  cached prefix survives its writer's release.  LRU eviction (leaf
+  first, zero-external-ref only) returns pages to the allocator when
+  admission or decode starves.
+
+Hit capping: a lookup never matches a request's ENTIRE prompt — at
+least one suffix token must run through prefill to produce the first
+output logits — so the usable match is
+``min(matched_pages, (prompt_len - 1) // page_size)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefixStats:
+    """Admission-side accounting (mirrored into ServeResult)."""
+
+    lookups: int = 0           # admitted requests matched against the index
+    hits: int = 0              # ... of which matched >= 1 full page
+    hit_tokens: int = 0        # total prompt tokens served from cache
+    inserted_pages: int = 0    # pages ever pinned into the index
+    evictions: int = 0         # pages unpinned by LRU pressure
+    peak_shared: int = 0       # max simultaneously shared pages observed
+
+
+class _Node:
+    """One full-page chunk on a token path.  ``key`` is the raw bytes of
+    the page's token ids; ``page`` the physical page holding its KV."""
+
+    __slots__ = ("key", "page", "children", "parent", "stamp")
+
+    def __init__(self, key: bytes, page: int, parent: "_Node"):
+        self.key = key
+        self.page = page
+        self.children: Dict[bytes, _Node] = {}
+        self.parent = parent
+        self.stamp = 0
+
+
+class PrefixCache:
+    """Radix index + LRU eviction over a :class:`BlockAllocator`.
+
+    The cache never owns device memory — it pins allocator pages and
+    maps token paths to them.  Both execution backends drive one of
+    these through the shared ``paging.admit_blocks`` policy, so hit
+    accounting cannot drift between the engine and the cost model."""
+
+    def __init__(self, page_size: int):
+        assert page_size > 0
+        self.page_size = page_size
+        self.root = _Node(b"", -1, None)  # sentinel, never holds a page
+        # dict-as-ordered-set (O(1) removal, insertion-ordered
+        # iteration): eviction scans once for the LRU evictable leaf
+        # but never pays a list.remove on top
+        self._nodes: Dict[_Node, None] = {}
+        self._clock = 0
+        self.stats = PrefixStats()
+
+    # ----------------------------------------------------------- helpers --
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _chunk(self, tokens: np.ndarray, j: int) -> bytes:
+        p = self.page_size
+        return np.ascontiguousarray(
+            tokens[j * p:(j + 1) * p], dtype=np.int32).tobytes()
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def pinned_pages(self) -> List[int]:
+        return [n.page for n in self._nodes]
+
+    # ------------------------------------------------------------ lookup --
+    def lookup(self, tokens) -> Tuple[List[int], int]:
+        """Longest cached page run for ``tokens``, capped so at least
+        one suffix token remains to prefill.  Returns (pages, tokens
+        matched); touches the path for LRU."""
+        tokens = np.asarray(tokens)
+        usable_cap = (len(tokens) - 1) // self.page_size
+        node, pages = self.root, []
+        stamp = self._tick()
+        for j in range(usable_cap):
+            child = node.children.get(self._chunk(tokens, j))
+            if child is None:
+                break
+            child.stamp = stamp
+            pages.append(child.page)
+            node = child
+        return pages, len(pages) * self.page_size
+
+    # ---------------------------------------------------------- register --
+    def register(self, alloc, tokens, table: List[int]) -> int:
+        """Index a freshly prefilled request's FULL prompt pages.  Walks
+        the trie along the token path; chunks already present keep their
+        canonical page (first-wins — a concurrent cold duplicate's page
+        simply stays private); new chunks pin the request's own page.
+        Returns how many new pages were pinned."""
+        tokens = np.asarray(tokens)
+        n_full = len(tokens) // self.page_size
+        node, added = self.root, 0
+        stamp = self._tick()
+        for j in range(n_full):
+            key = self._chunk(tokens, j)
+            child = node.children.get(key)
+            if child is None:
+                page = table[j]
+                alloc.pin(page)
+                child = _Node(key, page, node)
+                node.children[key] = child
+                self._nodes[child] = None
+                self.stats.inserted_pages += 1
+                added += 1
+            child.stamp = stamp
+            node = child
+        return added
+
+    # ---------------------------------------------------------- eviction --
+    def _evict_node(self, alloc, node: _Node) -> bool:
+        freed = alloc.unpin(node.page)
+        assert freed, "evictable leaf had refcount 1 but did not free"
+        del node.parent.children[node.key]
+        self._nodes.pop(node, None)
+        self.stats.evictions += 1
+        return freed
+
+    def _evictable(self, alloc, protect) -> List[_Node]:
+        """Evictable: a LEAF (an interior node is still an ancestor on
+        live paths) whose page has refcount exactly 1 (only our pin — no
+        live block table) and is not in ``protect`` (pages matched for
+        the admission in progress)."""
+        return [n for n in self._nodes
+                if not n.children and n.page not in protect
+                and alloc.refs(n.page) == 1]
+
+    def evict_one(self, alloc, protect=()) -> bool:
+        """Evict the least-recently-used evictable leaf; True if a page
+        went back to the free list."""
+        cands = self._evictable(alloc, set(protect))
+        if not cands:
+            return False
+        return self._evict_node(alloc, min(cands, key=lambda n: n.stamp))
+
+    def evict(self, alloc, need: int, protect=()) -> int:
+        """Free up to ``need`` pages, harvesting the evictable leaves
+        oldest-stamp-first from ONE scan per generation (evicting a
+        whole leaf generation may expose parents as new leaves — the
+        outer loop rescans only then).  Returns pages actually freed;
+        reclaiming k pages costs O(generations · nodes), not k full
+        scans."""
+        protect = set(protect)
+        freed = 0
+        while freed < need:
+            cands = self._evictable(alloc, protect)
+            if not cands:
+                break
+            for n in sorted(cands, key=lambda c: c.stamp):
+                if freed >= need:
+                    break
+                freed += self._evict_node(alloc, n)
+        return freed
+
+    def clear(self, alloc) -> int:
+        """Unpin everything (leaf-first).  Returns pages freed."""
+        freed = 0
+        while self._nodes:
+            progressed = False
+            for n in list(self._nodes):
+                if n.children:
+                    continue
+                freed += bool(alloc.unpin(n.page))
+                del n.parent.children[n.key]
+                self._nodes.pop(n, None)
+                progressed = True
+            assert progressed, "cycle in prefix trie"
+        return freed
+
+    # ------------------------------------------------------------- stats --
+    def note_admit(self, alloc, hit_tokens: int) -> None:
+        """Called by ``paging.admit_blocks`` once per ADMITTED request
+        (counting only admissions keeps engine/cost-model hit counts
+        comparable — both admit identical batches under parity)."""
+        self.stats.lookups += 1
+        if hit_tokens > 0:
+            self.stats.hits += 1
+            self.stats.hit_tokens += hit_tokens
+        self.stats.peak_shared = max(self.stats.peak_shared,
+                                     alloc.shared_pages())
+
+    def pages_saved(self) -> int:
+        return self.stats.hit_tokens // self.page_size

@@ -25,6 +25,10 @@ class Request:
     tokens: Optional[np.ndarray] = None  # actual token ids (real engine)
 
     # --- lifecycle (filled by scheduler/engine) ---
+    # prompt tokens served from the cross-request prefix cache at the
+    # LAST admission (page-aligned; 0 = cold).  Set by
+    # paging.admit_blocks, reset when a preemption re-queues the request.
+    prefix_hit_tokens: int = 0
     prefill_start: float = -1.0
     first_token: float = -1.0
     finished: float = -1.0
@@ -51,3 +55,13 @@ class Request:
         if self.finished < 0 or self.dropped:
             return False
         return self.ttft() <= self.slo_ttft and self.tpot() <= self.slo_tpot
+
+    def materialize_tokens(self, vocab_size: int) -> None:
+        """Fill in concrete prompt token ids when the workload supplied
+        none.  THE one seeding rule shared by every execution backend —
+        the prefix cache's radix index keys on these ids, so any drift
+        between backends would silently break hit-count parity."""
+        if self.tokens is None:
+            rng = np.random.default_rng(self.rid)
+            self.tokens = rng.integers(
+                0, vocab_size, self.prompt_len).astype(np.int32)

@@ -101,7 +101,8 @@ class SchedulerBase:
     # -------------------------------------------------- decode admission --
     def _live_tokens(self, req: Request) -> int:
         return self.batcher.charge_tokens(req.prompt_len
-                                          + req.max_new_tokens)
+                                          + req.max_new_tokens,
+                                          req.prefix_hit_tokens)
 
     def admit_decode(self, req: Request) -> None:
         self.monitor.decode_pool += 1
@@ -182,7 +183,7 @@ class BucketServeScheduler(SchedulerBase):
             self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
         if win:
             tokens = min(tokens, win)
-        return self.batcher.charge_tokens(tokens)
+        return self.batcher.charge_tokens(tokens, req.prefix_hit_tokens)
 
     # ------------------------------------------------------- KV transfer --
     def kv_transfer_seconds(self, batch: FormedBatch) -> float:

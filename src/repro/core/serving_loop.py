@@ -99,13 +99,29 @@ class WallClock:
 
 
 # ---------------------------------------------------------------- jobs ----
-def plan_chunks(total: int, chunk: Optional[int]) -> List[Tuple[int, int]]:
+def plan_chunks(total: int, chunk: Optional[int],
+                skip: int = 0) -> List[Tuple[int, int]]:
     """Split ``total`` padded prompt tokens into (start, length) spans.
-    ``chunk`` of None/<=0/>=total means whole-prompt (one span).  Shared
-    by every backend so the span math cannot drift between substrates."""
+    ``chunk`` of None/<=0/>=remaining means whole-prompt (one span).
+    ``skip`` head positions (a cached prefix) are excluded from
+    planning but spans keep ABSOLUTE offsets, so token slicing and RoPE
+    stay positionally exact.  Shared by every backend so the span math
+    cannot drift between substrates."""
+    if skip:
+        assert 0 < skip < total, (skip, total)
+        return [(skip + s, ln) for s, ln in plan_chunks(total - skip, chunk)]
     if not chunk or chunk <= 0 or chunk >= total:
         return [(0, total)]
     return [(s, min(chunk, total - s)) for s in range(0, total, chunk)]
+
+
+def batch_prefix_skip(batch: FormedBatch) -> int:
+    """Prompt positions a whole batch can skip: the MINIMUM cached
+    prefix across rows (page-aligned; a cold row pins it to 0).  Rows
+    with longer hits recompute the overlap — bit-identical by
+    construction, so correctness never depends on batch mixing.  The
+    ONE min-over-batch rule both backends plan chunks with."""
+    return min((r.prefix_hit_tokens for r in batch.requests), default=0)
 
 
 @dataclasses.dataclass
@@ -154,7 +170,10 @@ class ExecutionBackend(Protocol):
         """Reserve insert-time KV pages for a PREFIX of the batch; return
         how many requests got pages (all of them for non-paged backends).
         The loop re-queues the rest — the block analogue of the
-        decode-slot clamp."""
+        decode-slot clamp.  Prefix-cached backends also match each
+        prompt against their radix index here, setting
+        ``Request.prefix_hit_tokens`` (the loop feeds it to the
+        monitor and the chunk plan skips the cached span)."""
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
         """Called before each decode iteration: grow every pooled
@@ -203,6 +222,15 @@ class ServeResult:
     interleaved_decode_steps: int = 0    # decode iters run mid-prefill-job
     peak_pool: int = 0                   # max concurrent decode requests
     preempt_events: int = 0              # paged-pool mid-decode evictions
+    # ---- prefix-cache accounting (core/prefix_cache.py) ----
+    prefill_tokens_processed: int = 0    # padded prompt tokens actually run
+    prefill_tokens_skipped: int = 0      # prompt tokens served from cache
+    prefix_lookups: int = 0              # admitted requests matched
+    prefix_hits: int = 0                 # ... with >= 1 cached page
+    prefix_hit_tokens: int = 0
+    prefix_pages_saved: int = 0
+    prefix_evictions: int = 0
+    shared_pages_peak: int = 0
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -217,6 +245,9 @@ class ServeResult:
 
     def server_rps(self) -> float:
         return len(self.finished()) / max(self.makespan, 1e-9)
+
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / max(self.prefix_lookups, 1)
 
     def slo_attainment(self) -> float:
         if not self.requests:
@@ -256,6 +287,8 @@ class _LoopState:
     interleaved: int = 0
     peak: int = 0
     preempts: int = 0
+    prefill_tok: int = 0
+    prefill_skip: int = 0
 
 
 # ---------------------------------------------------------------- config --
@@ -296,6 +329,15 @@ class ServingLoop:
         st = self.st
         overhead = getattr(getattr(self.sched, "buckets", None),
                            "overhead_s", 0.0)
+        extra = {}
+        pc = getattr(self.backend, "prefix_cache", None)
+        if pc is not None:
+            extra = dict(prefix_lookups=pc.stats.lookups,
+                         prefix_hits=pc.stats.hits,
+                         prefix_hit_tokens=pc.stats.hit_tokens,
+                         prefix_pages_saved=pc.pages_saved(),
+                         prefix_evictions=pc.stats.evictions,
+                         shared_pages_peak=pc.stats.peak_shared)
         return ServeResult(
             requests=requests, makespan=self.backend.clock.now(),
             busy_prefill=st.busy_p, busy_decode=st.busy_d,
@@ -304,7 +346,9 @@ class ServingLoop:
             prefill_time_total=st.t_pre, decode_time_total=st.t_dec,
             transfer_time_total=st.t_xfer,
             interleaved_decode_steps=st.interleaved,
-            peak_pool=st.peak, preempt_events=st.preempts)
+            peak_pool=st.peak, preempt_events=st.preempts,
+            prefill_tokens_processed=st.prefill_tok,
+            prefill_tokens_skipped=st.prefill_skip, **extra)
 
     # ------------------------------------------------------------ shared --
     def _wall_exceeded(self) -> bool:
@@ -394,12 +438,25 @@ class ServingLoop:
                                 bucket=batch.bucket)
         if hasattr(self.sched, "notify_dispatch"):
             self.sched.notify_dispatch()             # OOM-backoff recovery
+        pc = getattr(self.backend, "prefix_cache", None)
+        mon = getattr(self.sched, "monitor", None)
+        if pc is not None and mon is not None:
+            for r in batch.requests:
+                mon.on_prefix_lookup(r.prefix_hit_tokens, pc.page_size)
         return batch, False
 
-    def _account_prefill_batch(self, batch: FormedBatch) -> None:
+    def _account_prefill_batch(self, batch: FormedBatch,
+                               skip: int = 0) -> None:
+        """``skip`` prompt positions per row were served from the prefix
+        cache — neither useful nor padded FLOPs were spent on them."""
         fpt = self.backend.flops_per_token
-        self.st.useful += fpt * batch.total_tokens
-        self.st.padded += fpt * batch.padded_tokens
+        if skip:
+            self.st.useful += fpt * sum(max(r.prompt_len - skip, 0)
+                                        for r in batch.requests)
+            self.st.padded += fpt * max(batch.pad_to - skip, 0) * batch.size
+        else:
+            self.st.useful += fpt * batch.total_tokens
+            self.st.padded += fpt * batch.padded_tokens
 
     def _preempt_for_decode(self, now: float) -> bool:
         """Paged backends may need to evict the youngest pooled requests
@@ -414,6 +471,7 @@ class ServingLoop:
             r.generated = 0
             r.first_token = -1.0
             r.prefill_start = -1.0
+            r.prefix_hit_tokens = 0       # re-matched at the next admission
             r.arrival = now + self.cfg.restart_penalty
             self.sched.on_arrival(r, r.arrival, requeue=True)
             self.st.preempts += 1
@@ -506,9 +564,14 @@ class ServingLoop:
         dur = dur if self.backend.clock.virtual else end - now
         st.busy_p += dur
         st.t_pre += dur * batch.size
+        st.prefill_tok += job.chunks[idx][1] * batch.size
 
         if job.done:
-            self._account_prefill_batch(batch)
+            # a chunk plan starting past 0 skipped a cached prefix: those
+            # positions were never run through the prefill executor
+            skip = job.chunks[0][0]
+            st.prefill_skip += skip * batch.size
+            self._account_prefill_batch(batch, skip=skip)
             xfer = self.backend.transfer_seconds(batch)
             for r in batch.requests:
                 r.first_token = end
@@ -610,6 +673,7 @@ class ServingLoop:
                     r.generated = 1
                 st.busy_p += pdt
                 st.t_pre += pdt * batch.size
+                st.prefill_tok += batch.pad_to * batch.size
                 self._account_prefill_batch(batch)
             if n_pool:
                 st.busy_d += ddt
@@ -645,6 +709,7 @@ class ServingLoop:
         job.next_chunk = 1
         st.busy_p += pdt
         st.t_pre += pdt * n
+        st.prefill_tok += pad * n
         self._account_prefill_batch(batch)
         t = self._after(now, pdt)
         for r in batch.requests:

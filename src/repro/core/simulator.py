@@ -32,9 +32,10 @@ import math
 from repro.models.config import ModelConfig
 from . import paging
 from .batcher import FormedBatch
+from .prefix_cache import PrefixCache
 from .request import Request
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
-                           VirtualClock, plan_chunks)
+                           VirtualClock, batch_prefix_skip, plan_chunks)
 
 # Back-compat alias: benchmark/analysis code predating the unified loop
 # imports the result type under its simulator-era name.
@@ -137,6 +138,13 @@ class CostModelBackend:
     through the same BlockAllocator + admit/extend/preempt policies, so
     the two backends make identical paged admission decisions (the
     backend-parity invariant, DESIGN.md §3).
+
+    ``prefix_cache=True`` mirrors the engine's cross-request prefix
+    cache too: token ids are materialized with the engine's exact rng
+    rule, the same radix index drives lookups/registration through
+    ``paging.admit_blocks``, and chunk plans skip the cached prefix —
+    so hit counts, admission decisions AND the priced prefill work
+    (incremental attention from the resume offset) stay in parity.
     """
 
     prefill_needs_slots = False
@@ -146,12 +154,20 @@ class CostModelBackend:
                  chunk_tokens: Optional[int] = None, paged: bool = False,
                  page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
-                 cache_len: Optional[int] = None):
+                 cache_len: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.cost = cost
         self.clock = VirtualClock()
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.flops_per_token = 2.0 * cost.p_active
+        self.prefix_cache: Optional[PrefixCache] = None
+        if prefix_cache:
+            assert paged, "prefix cache rides on the paged KV pool"
+            assert cost.cfg.prefix_cacheable, \
+                f"{cost.cfg.name}: prefix cache needs chunk-resumable " \
+                "prefill and purely attention-paged state"
+            self.prefix_cache = PrefixCache(page_size)
         if paged:
             # block accounting REPLACES the token-budget OOM check
             self._kv_budget = math.inf
@@ -181,6 +197,13 @@ class CostModelBackend:
         if self.paged:
             self.alloc = paging.BlockAllocator(self.alloc.n_pages,
                                                self.page_size)
+        if self.prefix_cache is not None:
+            self.prefix_cache = PrefixCache(self.page_size)
+            # the radix index keys on ACTUAL token ids: materialize them
+            # through the one shared rule (Request.materialize_tokens)
+            # so both backends make identical hit/miss decisions
+            for r in requests:
+                r.materialize_tokens(self.cost.cfg.vocab_size)
 
     def kv_budget_tokens(self) -> float:
         return self._kv_budget
@@ -195,27 +218,46 @@ class CostModelBackend:
     def _decode_tokens(self, r: Request) -> int:
         return min(r.prompt_len + r.generated, self._cap)
 
+    def _prompt_tokens(self, r: Request):
+        return r.tokens[:r.prompt_len]
+
     def admit_blocks(self, requests: Sequence[Request]) -> int:
         if not self.paged:
             return len(requests)
-        return paging.admit_blocks(self.alloc, requests, self._insert_tokens)
+        return paging.admit_blocks(self.alloc, requests, self._insert_tokens,
+                                   cache=self.prefix_cache,
+                                   tokens_of=self._prompt_tokens)
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
         if not self.paged:
             return []
         return paging.extend_for_decode(self.alloc, pool,
-                                        self._decode_tokens)
+                                        self._decode_tokens,
+                                        cache=self.prefix_cache)
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         # same gate as the real engine (cfg.chunkable_prefill) so the two
         # backends schedule identically for ring-cache/VLM configs
         c = self.chunk_tokens if self.cost.cfg.chunkable_prefill else None
-        return plan_chunks(batch.pad_to, c)
+        skip = batch_prefix_skip(batch) if self.prefix_cache is not None \
+            else 0
+        return plan_chunks(batch.pad_to, c, skip=skip)
 
     def prefill_chunk(self, job: PrefillJob, idx: int) -> float:
         start, length = job.chunks[idx]
-        if len(job.chunks) == 1:
+        if idx == len(job.chunks) - 1 and self.prefix_cache is not None:
+            # mirror the engine's registration point (end of prefill,
+            # decode-continuing rows only) so hit counts stay in parity
+            for r in job.batch.requests:
+                if r.max_new_tokens > 1 and self.cost.cfg.has_decode:
+                    self.prefix_cache.register(
+                        self.alloc, self._prompt_tokens(r),
+                        self.alloc.table(r.rid))
+        if len(job.chunks) == 1 and start == 0:
             return self.cost.prefill_seconds(job.batch.size, length)
+        # a span starting past 0 (later chunk OR resumed-after-prefix
+        # prefill) pays the incremental quadratic attention cost of
+        # extending each sequence's context from ``start``
         return self.cost.prefill_chunk_seconds(job.batch.size, start, length)
 
     def transfer_seconds(self, batch: FormedBatch) -> float:
@@ -251,7 +293,8 @@ class Simulator:
                  tick: float = 0.005, chunk_tokens: Optional[int] = None,
                  paged: bool = False, page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
-                 cache_len: Optional[int] = None):
+                 cache_len: Optional[int] = None,
+                 prefix_cache: bool = False):
         assert mode in ("disagg", "coupled", "static")
         # static mode runs a batch to completion without per-iteration
         # decode_preempt extends, so paged accounting would silently
@@ -259,6 +302,12 @@ class Simulator:
         assert not (paged and mode == "static"), \
             "paged KV accounting needs iteration-level decode " \
             "(disagg/coupled)"
+        # fused-iteration modes bypass backend.chunk_plan (prefill is one
+        # hardcoded whole-prompt span), so a prefix cache would count
+        # hits and discount charges WITHOUT ever skipping prefill —
+        # refuse rather than silently misreport
+        assert not (prefix_cache and mode != "disagg"), \
+            "prefix cache needs chunk-planned prefill (disagg mode)"
         self.sched = scheduler
         self.cost = cost
         self.mode = mode
@@ -267,7 +316,8 @@ class Simulator:
         self.backend = CostModelBackend(
             cost, kv_budget=cost.kv_budget_tokens(chips),
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
-            kv_pool_tokens=kv_pool_tokens, cache_len=cache_len)
+            kv_pool_tokens=kv_pool_tokens, cache_len=cache_len,
+            prefix_cache=prefix_cache)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick))

@@ -8,6 +8,16 @@
 * ``mixed``     — 50/50 of the two (paper's heterogeneous case).
 
 Arrivals are Poisson at a given RPS.  Everything is seeded/deterministic.
+
+Shared-prefix scenario family (PR 3, for the cross-request prefix
+cache): ``prefix_groups > 0`` materializes ACTUAL token ids — each
+request samples one of N distinct "system prompts" of
+``prefix_tokens`` ids with Zipf-distributed reuse (a few prompts
+dominate, the long tail is cold — standard multi-tenant agentic
+traffic shape) and appends a per-request random suffix drawn from the
+dataset's length distribution.  Requests carrying tokens flow through
+both execution backends unchanged, so the engine and the cost model
+see bit-identical prompts.
 """
 from __future__ import annotations
 
@@ -33,6 +43,11 @@ class WorkloadSpec:
     slo_tpot: float = 0.2
     seed: int = 0
     max_new_tokens: int = 0        # 0 = sample per dataset
+    # ---- shared-prefix scenario family (0 = classic length-only) ----
+    prefix_groups: int = 0         # N distinct shared system prompts
+    prefix_tokens: int = 256       # length of each shared prefix
+    prefix_zipf: float = 1.2       # Zipf skew of prefix reuse (> 1)
+    vocab_size: int = 32000        # id range for materialized tokens
 
 
 def _sample_prompt_lens(rng, dataset: str, n: int, max_len: int):
@@ -75,6 +90,21 @@ def generate(spec: WorkloadSpec) -> List[Request]:
     gaps = rng.exponential(1.0 / max(spec.rps, 1e-9), n)
     arrivals = np.cumsum(gaps)
     plens = _sample_prompt_lens(rng, spec.dataset, n, spec.max_model_len)
+    tokens: List = [None] * n
+    if spec.prefix_groups > 0:
+        assert spec.prefix_zipf > 1.0, "np Zipf needs skew > 1"
+        pre = min(max(spec.prefix_tokens, 1), spec.max_model_len - 2)
+        prefixes = [rng.integers(0, spec.vocab_size, pre).astype(np.int32)
+                    for _ in range(spec.prefix_groups)]
+        groups = (rng.zipf(spec.prefix_zipf, n) - 1) % spec.prefix_groups
+        # dataset lengths become the SUFFIX lengths (>= 1 so at least
+        # one uncached token always runs through prefill)
+        slens = np.clip(plens, 1, spec.max_model_len - 1 - pre)
+        for i in range(n):
+            suffix = rng.integers(0, spec.vocab_size,
+                                  int(slens[i])).astype(np.int32)
+            tokens[i] = np.concatenate([prefixes[int(groups[i])], suffix])
+        plens = pre + slens
     olens = (_sample_output_lens(rng, spec.dataset, n)
              if spec.max_new_tokens == 0
              else np.full(n, spec.max_new_tokens, np.int64))
@@ -84,6 +114,7 @@ def generate(spec: WorkloadSpec) -> List[Request]:
         Request(rid=i, prompt_len=int(plens[i]),
                 max_new_tokens=max(int(olens[i]), 1),
                 arrival=float(arrivals[i]), task_type=spec.task_type,
-                slo_ttft=spec.slo_ttft, slo_tpot=spec.slo_tpot)
+                slo_ttft=spec.slo_ttft, slo_tpot=spec.slo_tpot,
+                tokens=tokens[i])
         for i in range(n)
     ]

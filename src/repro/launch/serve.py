@@ -55,12 +55,20 @@ def _run_sim(cfg, args, reqs):
     sim = Simulator(sched, CostModel(cfg, hw), mode="disagg",
                     decode_slot_cap=args.slots, chunk_tokens=args.chunk,
                     paged=args.paged, page_size=args.page_size,
-                    kv_pool_tokens=args.pool_tokens)
+                    kv_pool_tokens=args.pool_tokens,
+                    prefix_cache=args.prefix_cache)
     res = sim.run(reqs)
+    prefix_info = ""
+    if args.prefix_cache:
+        prefix_info = (f"prefix hits {res.prefix_hits}/{res.prefix_lookups} "
+                       f"({res.prefix_hit_rate():.2f}), "
+                       f"{res.prefill_tokens_skipped} prompt tokens "
+                       f"skipped, {res.prefix_pages_saved} pages saved; ")
     print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
           f"{res.makespan:.2f} virtual s; {res.throughput_tok_s():.0f} tok/s; "
           f"SLO {res.slo_attainment():.2f}; OOM {res.oom_events}; "
           f"peak pool {res.peak_pool}; preemptions {res.preempt_events}; "
+          f"{prefix_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
 
 
@@ -78,6 +86,17 @@ def main():
                     help="paged KV decode pool (block-table admission)")
     ap.add_argument("--page-size", type=int, default=128,
                     help="KV page size in tokens (with --paged)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix cache on the paged pool "
+                         "(radix lookup + refcounted shared pages; "
+                         "implies --paged)")
+    ap.add_argument("--prefix-scenarios", type=int, default=0,
+                    help="shared-prefix workload family: N distinct "
+                         "system prompts with Zipf reuse (0 = classic "
+                         "length-only workload)")
+    ap.add_argument("--prefix-tokens", type=int, default=128,
+                    help="tokens per shared system prompt (with "
+                         "--prefix-scenarios)")
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="total pooled KV tokens (default: slots x "
                          "cache_len — the contiguous pool's budget — on "
@@ -92,6 +111,7 @@ def main():
     ap.add_argument("--trigger", default="waste",
                     choices=["majority", "waste"])
     args = ap.parse_args()
+    args.paged = args.paged or args.prefix_cache
 
     if args.smoke:
         cfg = get_smoke_config(args.arch, max_seq_len=256)
@@ -103,7 +123,10 @@ def main():
 
     spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
                         n_requests=args.requests,
-                        max_model_len=cfg.max_seq_len)
+                        max_model_len=cfg.max_seq_len,
+                        prefix_groups=args.prefix_scenarios,
+                        prefix_tokens=args.prefix_tokens,
+                        vocab_size=cfg.vocab_size)
     reqs = generate(spec)
     for r in reqs:   # keep CPU smoke runs short
         r.max_new_tokens = min(r.max_new_tokens, 8)
@@ -133,7 +156,8 @@ def main():
                            cache_len=cfg.max_seq_len,
                            moe_impl="local", chunk_tokens=args.chunk,
                            paged=args.paged, page_size=args.page_size,
-                           kv_pool_tokens=args.pool_tokens)
+                           kv_pool_tokens=args.pool_tokens,
+                           prefix_cache=args.prefix_cache)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -147,6 +171,13 @@ def main():
                       f"free {be.free_blocks()}; "
                       f"peak pool {engine.result.peak_pool}; "
                       f"preemptions {engine.result.preempt_events}; ")
+        if args.prefix_cache:
+            r = engine.result
+            paged_info += (
+                f"prefix hits {r.prefix_hits}/{r.prefix_lookups} "
+                f"({r.prefix_hit_rate():.2f}), {r.prefill_tokens_skipped} "
+                f"prompt tokens skipped, {r.prefix_pages_saved} pages "
+                f"saved, {r.shared_pages_peak} peak shared; ")
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.1f}s; prefill shapes: {engine.n_prefill_shapes}; "
           f"decode steps interleaved between prefill chunks: "

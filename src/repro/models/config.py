@@ -116,6 +116,21 @@ class ModelConfig:
         return win == 0
 
     @property
+    def prefix_cacheable(self) -> bool:
+        """Cross-request prefix cache gate (DESIGN.md §3 "Prefix
+        sharing").  Skipping prefill after a cached prefix requires (a)
+        chunked prefill (resume at an absolute offset — positional,
+        non-ring caches only) and (b) that the ENTIRE per-token state
+        lives in pageable self-attention KV: recurrent carries (RWKV /
+        RG-LRU) and vision cross-KV depend on the whole prefix and
+        cannot be restored from shared pages.  Shared gate for the real
+        engine and the cost model (backend parity)."""
+        if not self.has_decode or not self.chunkable_prefill:
+            return False
+        return all(b in (BLOCK_ATTN, BLOCK_MOE)
+                   for pat, _ in self.block_groups() for b in pat)
+
+    @property
     def subquadratic(self) -> bool:
         """Can this config serve 500k-token contexts?
 

@@ -2,13 +2,15 @@
 property tests) and the shared admission/extension/preemption policies
 both execution backends drive (core/paging.py, DESIGN.md §3).
 
-Invariants:
-  * a page is never assigned to two live requests at once;
-  * free + live == total (no leaks), across any alloc/extend/release
-    interleaving;
+Invariants (generalized for refcounted prefix sharing, PR 3):
+  * a page's refcount always equals (#live tables holding it) + (#pins)
+    — no page is freed while referenced;
+  * free + unique-live == total (no leaks, shared pages counted ONCE),
+    across any alloc/share/extend/pin/unpin/release interleaving;
   * a live request's table covers exactly ceil(tokens / page_size)
     pages;
-  * alloc/extend are all-or-nothing (failed calls change nothing).
+  * alloc/extend are all-or-nothing (failed calls change nothing);
+  * release is idempotent per rid.
 """
 import dataclasses
 
@@ -79,6 +81,49 @@ class TestBlockAllocator:
             for p in a.alloc(rid, 8):
                 assert p not in seen
                 seen.add(p)
+
+    def test_shared_alloc_refcounts(self):
+        """A shared prefix page lives in BOTH tables, is counted once in
+        live_pages, and is freed only when the LAST reference drops."""
+        a = BlockAllocator(n_pages=4, page_size=8)
+        t0 = a.alloc(0, 16)                          # 2 pages
+        t1 = a.alloc(1, 17, shared=t0[:2])           # shares both + 1 new
+        assert t1[:2] == t0[:2] and len(t1) == 3
+        assert a.live_pages() == 3                   # unique pages
+        assert a.free_pages() + a.live_pages() == 4
+        assert a.refs(t0[0]) == 2 and a.shared_pages() == 2
+        assert a.release(0) == 0                     # nothing freed: shared
+        assert a.refs(t0[0]) == 1
+        assert a.release(1) == 3                     # last refs drop
+        assert a.free_pages() == 4 and a.live_pages() == 0
+
+    def test_shared_alloc_all_or_nothing_keeps_refs(self):
+        """A failed shared alloc must not leave refcount bumps behind."""
+        a = BlockAllocator(n_pages=3, page_size=8)
+        t0 = a.alloc(0, 16)
+        a.alloc(1, 8)                                # pool now full
+        before = a.refs(t0[0])
+        assert a.alloc(2, 32, shared=t0) is None     # needs 2 free, has 0
+        assert a.refs(t0[0]) == before
+        assert not a.holds(2)
+
+    def test_pin_unpin_survives_release(self):
+        """A cache pin keeps a page alive past its writer's release
+        (the prefix-cache lifetime rule)."""
+        a = BlockAllocator(n_pages=2, page_size=8)
+        t = a.alloc(0, 8)
+        a.pin(t[0])
+        assert a.release(0) == 0                     # pinned: not freed
+        assert a.refs(t[0]) == 1 and a.free_pages() == 1
+        assert a.unpin(t[0]) is True                 # now it frees
+        assert a.free_pages() == 2
+
+    def test_reclaimable_counts_only_sole_refs(self):
+        a = BlockAllocator(n_pages=4, page_size=8)
+        t0 = a.alloc(0, 16)
+        a.alloc(1, 24, shared=t0[:2])                # 2 shared + 1 private
+        assert a.reclaimable(0) == 0                 # both pages shared
+        assert a.reclaimable(1) == 1                 # only its private page
 
 
 class TestSharedPolicies:
@@ -177,3 +222,83 @@ if HAVE_HYPOTHESIS:
                 # tables cover exactly ceil(tokens / page) pages
                 for r, tk in tokens.items():
                     assert len(a.table(r)) == -(-tk // page)
+
+    shared_ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            # share the longest live prefix of a donor's table
+            st.tuples(st.just("salloc"), st.integers(0, 7),
+                      st.integers(1, 200), st.integers(0, 7)),
+            st.tuples(st.just("extend"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            st.tuples(st.just("release"), st.integers(0, 7)),
+            st.tuples(st.just("rerelease"), st.integers(0, 7)),
+            st.tuples(st.just("pin"), st.integers(0, 7)),
+            st.tuples(st.just("unpin"), st.integers(0, 30)),
+        ),
+        min_size=1, max_size=80)
+
+    class TestRefcountedAllocatorProperties:
+        """Satellite (PR 3): the PR 2 invariants generalized to
+        refcounted alloc/share/pin/release interleavings — no page is
+        freed while referenced, free + unique-live == total, release is
+        idempotent per rid.  A host-side refcount mirror is maintained
+        independently and compared against the allocator every step."""
+
+        @settings(deadline=None, max_examples=200)
+        @given(ops=shared_ops, n_pages=st.integers(2, 14),
+               page=st.sampled_from([1, 8, 128]))
+        def test_refcounted_interleavings_hold_invariants(self, ops,
+                                                          n_pages, page):
+            a = BlockAllocator(n_pages, page)
+            tables = {}                       # rid -> expected table
+            pins = []                         # pages we pinned (with dups)
+            for op in ops:
+                kind, rid = op[0], op[1]
+                if kind == "alloc" and not a.holds(rid):
+                    t = a.alloc(rid, op[2])
+                    if t is not None:
+                        tables[rid] = t
+                elif kind == "salloc" and not a.holds(rid):
+                    donor = tables.get(op[3])
+                    need = a.pages_for(op[2])
+                    shared = (donor or [])[:need]
+                    t = a.alloc(rid, op[2], shared=shared)
+                    if t is not None:
+                        assert t[:len(shared)] == list(shared)
+                        tables[rid] = t
+                elif kind == "extend" and a.holds(rid):
+                    new = a.extend(rid, op[2])
+                    if new is not None:
+                        tables[rid].extend(new)
+                elif kind == "release":
+                    freed = a.release(rid)
+                    t = tables.pop(rid, None)
+                    assert (freed > 0) <= (t is not None)
+                elif kind == "rerelease":
+                    a.release(rid)
+                    tables.pop(rid, None)
+                    assert a.release(rid) == 0       # idempotent per rid
+                elif kind == "pin" and a.holds(rid) and a.table(rid):
+                    p = a.table(rid)[0]
+                    a.pin(p)
+                    pins.append(p)
+                elif kind == "unpin" and pins:
+                    a.unpin(pins.pop(op[1] % len(pins)))
+
+                # refcount == (#tables holding the page) + (#pins)
+                expect = {}
+                for t in tables.values():
+                    for p in t:
+                        expect[p] = expect.get(p, 0) + 1
+                for p in pins:
+                    expect[p] = expect.get(p, 0) + 1
+                for p in range(n_pages):
+                    assert a.refs(p) == expect.get(p, 0)
+                # no page freed while referenced; shared counted once
+                assert a.free_pages() + a.live_pages() == n_pages
+                assert a.live_pages() == len(expect)
+                # tables still cover their spans exactly
+                for rid2, t in tables.items():
+                    assert a.table(rid2) == t
