@@ -15,7 +15,8 @@ import sys
 import time
 
 from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
-               fig6_overhead, kv_quant, prefix_cache, roofline, waste_model)
+               fig6_overhead, kv_quant, prefix_cache, roofline,
+               session_reuse, waste_model)
 
 TABLES = {
     "fig5_offline": fig5_offline.main,     # Fig. 5a/5b
@@ -26,6 +27,7 @@ TABLES = {
     "arch_sweep": arch_sweep.main,         # beyond-paper: all 10 archs
     "kv_quant": kv_quant.main,             # beyond-paper: int8 KV cache
     "prefix_cache": prefix_cache.main,     # beyond-paper: prefix sharing
+    "session_reuse": session_reuse.main,   # beyond-paper: session resume
     "roofline": roofline.main,             # §Roofline (dry-run derived)
 }
 

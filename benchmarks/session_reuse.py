@@ -1,0 +1,93 @@
+"""Multi-turn session retention: prefix-only vs session-resumed run.
+
+Beyond-paper table (PR 4, DESIGN.md §3 "Session retention"): the paged
+cost model serves the SAME multi-turn conversation workload
+(sessions x turns transcript growth, data/workload.py) twice — with
+the PR 3 radix prefix cache alone (turn N+1 reuses only its PROMPT-
+prefix pages), then with session retention on top (generated pages
+extend the radix path and the pinned tail hands over, so turn N+1
+resumes past the whole transcript) — and reports prompt tokens
+actually prefilled, session hit rate, tails reused and throughput.
+
+CI gate: the session-resumed run must prefill STRICTLY FEWER total
+prompt tokens than the prefix-only run — the delta is exactly what
+SESSION retention adds, so a dead session-resume path cannot hide
+behind radix savings (a regression here means release-time
+registration, the session lookup/claim or the tail hand-over rotted);
+the harness (benchmarks/run.py) exits nonzero on the raised
+AssertionError.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.batcher import MemoryBudget
+from repro.core.request import TaskType
+from repro.core.scheduler import BucketServeScheduler, SchedulerConfig
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.data.workload import WorkloadSpec, generate
+
+from .common import CFG, emit
+
+PAGE = 128
+
+
+def _run(spec: WorkloadSpec, *, session_ttl, slots: int):
+    reqs = generate(spec)
+    budget = MemoryBudget(hbm_bytes_per_device=A100X4.hbm_bytes,
+                          n_devices=A100X4.decode_chips,
+                          weight_bytes=CFG.param_count() * 2)
+    sched = BucketServeScheduler(CFG, budget, SchedulerConfig(
+        max_batch=slots, memory_model="paged", page_size=PAGE))
+    # the PR 3 radix stays ON in both runs: the gate must isolate what
+    # SESSION retention adds (generated-page paths + pinned tails) over
+    # plain prompt-prefix sharing, or a dead session-resume path would
+    # hide behind radix savings
+    sim = Simulator(sched, CostModel(CFG, A100X4), mode="disagg",
+                    decode_slot_cap=slots, paged=True, page_size=PAGE,
+                    prefix_cache=True, session_ttl=session_ttl)
+    t0 = time.perf_counter()
+    res = sim.run(reqs, time_limit=7200.0)
+    return res, time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> None:
+    sessions = 8 if quick else 32
+    turns = 3 if quick else 5
+    spec = WorkloadSpec(dataset="alpaca", rps=4.0, sessions=sessions,
+                        turns=turns, utterance_tokens=512,
+                        max_new_tokens=64 if quick else 128,
+                        think_time_s=2.0, task_type=TaskType.OFFLINE,
+                        max_model_len=CFG.max_seq_len, seed=0,
+                        vocab_size=CFG.vocab_size)
+    rows = []
+    by_mode = {}
+    for ttl in (None, 600.0):
+        res, wall = _run(spec, session_ttl=ttl, slots=32)
+        by_mode[ttl] = res
+        rows.append([
+            "session_reuse", "resumed" if ttl is not None else "prefix-only",
+            sessions, turns, res.prefill_tokens_processed,
+            res.prefill_tokens_skipped,
+            f"{res.session_hits}/{res.session_lookups}",
+            res.session_hit_tokens, res.tail_pages_reused,
+            res.sessions_expired + res.sessions_evicted,
+            f"{res.output_tok_s():.1f}", f"{res.makespan:.2f}",
+            f"{wall:.1f}"])
+    emit(rows, ["table", "mode", "sessions", "turns", "prefill_tokens",
+                "tokens_skipped", "session_hits", "hit_tokens",
+                "tails_reused", "unpinned", "out_tok_s", "makespan_s",
+                "wall_s"])
+    cold = by_mode[None]
+    warm = by_mode[600.0]
+    assert warm.prefill_tokens_processed < cold.prefill_tokens_processed, \
+        (f"session-resumed run prefilled {warm.prefill_tokens_processed} "
+         f">= the prefix-only run's {cold.prefill_tokens_processed} prompt "
+         "tokens — session retention added nothing over the radix")
+    red = 1 - warm.prefill_tokens_processed / max(
+        cold.prefill_tokens_processed, 1)
+    print(f"claim,prefill_token_reduction,{red:.3f}")
+    print(f"claim,session_hit_rate,{warm.session_hit_rate():.3f}")
+    print(f"claim,throughput_ratio,"
+          f"{warm.output_tok_s() / max(cold.output_tok_s(), 1e-9):.3f}")
+    print()

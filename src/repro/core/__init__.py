@@ -8,6 +8,7 @@ from .scheduler import (BucketServeScheduler, SchedulerBase,  # noqa: F401
 from .monitor import GlobalMonitor                          # noqa: F401
 from .paging import BlockAllocator                          # noqa: F401
 from .prefix_cache import PrefixCache, PrefixStats          # noqa: F401
+from .retention import KvRetention, RetentionStats          # noqa: F401
 from .serving_loop import (Clock, ExecutionBackend,         # noqa: F401
                            LoopConfig, PrefillJob, ServeResult,
                            ServingLoop, VirtualClock, WallClock)

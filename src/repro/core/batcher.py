@@ -133,10 +133,13 @@ class DynamicBatchController:
         """Tokens a cache of ``cache_tokens`` is CHARGED against the
         budget: exact under "sum"/"padded" accounting, ceil-to-page under
         "paged" (a request pins whole pages — Eq. (6) on page granules).
-        ``shared_tokens`` (page-aligned, paged model only) is the
-        prefix-cache hit: shared pages are charged ONCE by whoever first
-        materialized them, so a sharer pays only its private suffix."""
+        ``shared_tokens`` (paged model only) is the retention hit:
+        shared pages are charged ONCE by whoever first materialized
+        them, so a sharer pays only its private suffix.  The discount is
+        FLOORED to full pages — a session-resumed hit is unaligned, but
+        its partial tail page is handed over PRIVATE to the request
+        (core/retention.py), so the request pays for that whole page."""
         if self.memory_model != "paged":
             return cache_tokens
         p = self.page_size
-        return max(-(-cache_tokens // p) * p - shared_tokens, 0)
+        return max((-(-cache_tokens // p) - shared_tokens // p) * p, 0)

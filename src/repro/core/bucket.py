@@ -32,6 +32,12 @@ class Bucket:
     low: int
     up: int
     requests: List[Request] = dataclasses.field(default_factory=list)
+    # cached min over ONLINE members' arrivals (None = no online member).
+    # The scheduler's bucket pick reads this every tick — maintained
+    # incrementally (O(1) on add, recomputed only when a bucket loses
+    # members) instead of rescanned over every request in every bucket.
+    _online_min: Optional[float] = dataclasses.field(default=None,
+                                                     repr=False)
 
     def __contains__(self, s: int) -> bool:
         return self.low <= s < self.up
@@ -42,6 +48,27 @@ class Bucket:
 
     def __len__(self) -> int:
         return len(self.requests)
+
+    # ----------------------------------- earliest-online maintenance --
+    def append(self, r: Request) -> None:
+        """The ONE way a request enters a bucket: keeps the cached
+        earliest-online arrival exact in O(1)."""
+        self.requests.append(r)
+        if r.task_type == TaskType.ONLINE and (
+                self._online_min is None or r.arrival < self._online_min):
+            self._online_min = r.arrival
+
+    def refresh_online(self) -> None:
+        """Recompute the cache after members were REMOVED (the dropped
+        one may have been the min) — O(len), paid only by buckets that
+        actually changed."""
+        arr = [r.arrival for r in self.requests
+               if r.task_type == TaskType.ONLINE]
+        self._online_min = min(arr) if arr else None
+
+    def earliest_online(self) -> Optional[float]:
+        """Arrival of the earliest ONLINE member (None if none)."""
+        return self._online_min
 
 
 class BucketManager:
@@ -77,11 +104,11 @@ class BucketManager:
             lows = [b.low for b in self.buckets]
             i = bisect.bisect_right(lows, s) - 1
             assert s in self.buckets[i]
-            self.buckets[i].requests.append(req)
+            self.buckets[i].append(req)
         else:  # paper lines 2-8: linear scan
             for b in self.buckets:
                 if s in b:
-                    b.requests.append(req)
+                    b.append(req)
                     break
             else:  # pragma: no cover
                 raise RuntimeError("bucket cover violated")
@@ -100,6 +127,7 @@ class BucketManager:
                 merged = Bucket(0, self.l_max)
                 for b in self.buckets:
                     merged.requests.extend(b.requests)
+                merged.refresh_online()
                 self.buckets = [merged]
                 self.n_merges += 1
         else:
@@ -124,7 +152,7 @@ class BucketManager:
                 b_r = Bucket(mid, b.up)
                 for r in b.requests:
                     (b_l if min(r.prompt_len, self.l_max - 1) < mid
-                     else b_r).requests.append(r)
+                     else b_r).append(r)
                 i = self.buckets.index(b)
                 self.buckets[i:i + 1] = [b_l, b_r]
                 self.n_splits += 1
@@ -161,7 +189,10 @@ class BucketManager:
     def pop(self, reqs: List[Request]) -> None:
         ids = {id(r) for r in reqs}
         for b in self.buckets:
-            b.requests = [r for r in b.requests if id(r) not in ids]
+            kept = [r for r in b.requests if id(r) not in ids]
+            if len(kept) != len(b.requests):
+                b.requests = kept
+                b.refresh_online()      # the min may have been removed
 
     def order_bucket(self, b: Bucket, policy: str) -> List[Request]:
         """Within-bucket ordering (paper §IV): SJF / LJF for offline,

@@ -45,6 +45,19 @@ prefilled full prompt pages are pinned into the index for future hits,
 and LRU zero-ref prefixes are evicted when admission or decode
 starves.
 
+Session retention (``session_ttl``, DESIGN.md §3 "Session retention"):
+release routes through :class:`~repro.core.retention.KvRetention`
+instead of freeing unconditionally — a finished request's FULL
+transcript pages (prompt AND generated: page content is a pure
+function of the token path) extend the radix index, and the partial
+tail page stays pinned under the session key with a TTL.  The next
+turn of the same conversation re-sends the transcript as its prompt
+prefix, matches it at admission (the pinned tail transfers to its
+block table at the right virtual index), seeds the batch cache up to
+the EXACT unaligned token, and resumes chunked prefill past the
+restored transcript — decode then continues into the reused tail page
+without a re-scatter of the transcript's pages.
+
 Chunked prefill (DESIGN.md §2): long prompts are split into
 ``chunk_tokens``-sized spans; the serving loop interleaves decode
 iterations between spans, so a 2k-token prefill no longer stalls every
@@ -66,6 +79,7 @@ from . import paging
 from .batcher import FormedBatch
 from .prefix_cache import PrefixCache
 from .request import Request
+from .retention import KvRetention
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
                            WallClock, batch_prefix_skip, plan_chunks)
 
@@ -81,7 +95,8 @@ class JaxEngineBackend:
                  chunk_tokens: Optional[int] = None,
                  paged: bool = False, page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 session_ttl: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -92,13 +107,17 @@ class JaxEngineBackend:
         self.supports_decode = cfg.has_decode
         self.flops_per_token = 2.0 * cfg.active_param_count()
         self.paged = paged
-        self.prefix_cache: Optional[PrefixCache] = None
+        # retention layer (core/retention.py): the radix prefix index
+        # plus, when session_ttl is set, TTL'd multi-turn session
+        # retention of finished transcripts
+        self.retention: Optional[KvRetention] = None
+        prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
-            assert paged, "prefix cache rides on the paged KV pool"
+            assert paged, "KV retention rides on the paged KV pool"
             assert cfg.prefix_cacheable, \
-                f"{cfg.name}: prefix cache needs chunk-resumable prefill " \
+                f"{cfg.name}: KV retention needs chunk-resumable prefill " \
                 "and purely attention-paged state (no recurrent carries)"
-            self.prefix_cache = PrefixCache(page_size)
+            self.retention = KvRetention(page_size, session_ttl=session_ttl)
 
         if paged:
             assert tfm.supports_paged_decode(cfg), \
@@ -143,6 +162,12 @@ class JaxEngineBackend:
         self.outputs: Dict[int, List[int]] = {}
         self._prefill_fns: Dict[tuple, callable] = {}
         self.n_prefill_shapes = 0
+
+    @property
+    def prefix_cache(self) -> Optional[PrefixCache]:
+        """The retention layer's radix backend (None when disabled) —
+        the surface older call sites and tests address."""
+        return self.retention.prefix if self.retention is not None else None
 
     # ------------------------------------------------------------- jits --
     def _prefill_fn(self, pad_to: int, bsz: int):
@@ -207,7 +232,7 @@ class JaxEngineBackend:
         if not self.paged:
             return len(requests)
         return paging.admit_blocks(self.alloc, requests, self._insert_tokens,
-                                   cache=self.prefix_cache,
+                                   cache=self.retention,
                                    tokens_of=self._prompt_tokens)
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
@@ -215,7 +240,7 @@ class JaxEngineBackend:
             return []
         victims = paging.extend_for_decode(self.alloc, pool,
                                            self._decode_tokens,
-                                           cache=self.prefix_cache)
+                                           cache=self.retention)
         for v in victims:
             slot = self._slot_of.pop(v.rid, None)
             if slot is not None:
@@ -296,16 +321,19 @@ class JaxEngineBackend:
         into the batch prefill cache, so chunked prefill can resume past
         it.  One gather per cache leaf for the whole batch; the gather is
         the exact inverse of ``_insert_slots_paged``'s scatter, so seeded
-        values are bit-identical to a cold recompute."""
+        values are bit-identical to a cold recompute.  A session-resumed
+        row's hit is NOT page-aligned (the pinned partial tail extends
+        it): the gather then includes the tail page and the per-row mask
+        cuts at the exact token."""
         page, maxp = self.page_size, self.pages_per_seq
         B = len(reqs)
         idx = np.full((B, maxp), self.trash_page, np.int32)
         plen = np.zeros((B,), np.int32)
         for i, r in enumerate(reqs):
-            npg = r.prefix_hit_tokens // page
+            npg = -(-r.prefix_hit_tokens // page)   # incl. a partial tail
             if npg:
                 idx[i, :npg] = self.alloc.table(r.rid)[:npg]
-                plen[i] = npg * page
+                plen[i] = r.prefix_hit_tokens
         if not plen.any():
             return
         idxj = jnp.asarray(idx)
@@ -344,7 +372,11 @@ class JaxEngineBackend:
             self.outputs[r.rid].append(tok)
             if r.max_new_tokens <= 1 or not self.cfg.has_decode:
                 if self.paged:
-                    self.alloc.release(r.rid)    # done at first token
+                    # done at first token: this row is never scattered
+                    # into the pool, so its pages hold NO transcript KV
+                    # — plain free, never retention (which would index
+                    # garbage pages into the radix)
+                    self.alloc.release(r.rid)
                 continue
             slot = next(free)
             self.slot_req[slot] = r
@@ -475,10 +507,38 @@ class JaxEngineBackend:
         if slot is not None:
             self.slot_req[slot] = None
         if self.paged:
-            self.alloc.release(req.rid)
+            self._release_pages(req)
             if slot is not None:
                 self._bt_host[slot] = self.trash_page
                 self._bt_dirty = True
+
+    def _release_pages(self, req: Request) -> None:
+        """End-of-life for a request's KV pages: one retention policy
+        instead of an unconditional free — the transcript's full pages
+        join the radix path and the partial tail stays pinned under the
+        session key (core/retention.py)."""
+        if self.retention is not None:
+            self.retention.on_release(self.alloc, req,
+                                      self._transcript_tokens(req),
+                                      self.clock.now())
+        else:
+            self.alloc.release(req.rid)
+
+    def _transcript_tokens(self, req: Request) -> np.ndarray:
+        """The token path whose KV the pool physically holds for
+        ``req``: prompt plus generated[:-1] — the iteration that
+        produced the LAST token never wrote its KV."""
+        out = self.outputs.get(req.rid) or []
+        gen = np.asarray(out[:max(req.generated - 1, 0)], np.int32)
+        return np.concatenate(
+            [np.asarray(self._prompt_tokens(req), np.int32), gen])
+
+    def generated_tokens(self, req: Request) -> np.ndarray:
+        return np.asarray(self.outputs.get(req.rid, ()), np.int32)
+
+    def maintain(self, now: float) -> None:
+        if self.retention is not None and self.paged:
+            self.retention.tick(self.alloc, now)
 
 
 class ServingEngine:
@@ -493,7 +553,8 @@ class ServingEngine:
                  chunk_tokens: Optional[int] = None, paged: bool = False,
                  page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 session_ttl: Optional[float] = None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -501,7 +562,8 @@ class ServingEngine:
             cfg, params, max_slots=max_slots, cache_len=cache_len,
             moe_impl=moe_impl, time_scale=time_scale,
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
-            kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache)
+            kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache,
+            session_ttl=session_ttl)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots))
         self.result: Optional[ServeResult] = None

@@ -23,6 +23,8 @@ class Snapshot:
     kv_util: float
     prefix_hit_rate: float = 0.0
     prefix_pages_saved: int = 0
+    session_hits: int = 0
+    session_hit_tokens: int = 0
 
 
 class GlobalMonitor:
@@ -43,6 +45,10 @@ class GlobalMonitor:
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
         self.prefix_pages_saved = 0
+        # session retention (core/retention.py): admitted requests that
+        # resumed a retained conversation transcript
+        self.session_hits = 0
+        self.session_hit_tokens = 0
 
     # ------------------------------------------------------------ events --
     def on_arrival(self, t: float, seq_len: int) -> None:
@@ -72,6 +78,13 @@ class GlobalMonitor:
             self.prefix_hit_tokens += hit_tokens
             self.prefix_pages_saved += hit_tokens // max(page_size, 1)
 
+    def on_session_hit(self, hit_tokens: int) -> None:
+        """One admitted request resumed a retained session transcript:
+        ``hit_tokens`` transcript tokens (including the pinned partial
+        tail) restored instead of re-prefilled."""
+        self.session_hits += 1
+        self.session_hit_tokens += hit_tokens
+
     # ------------------------------------------------------------- stats --
     def arrival_rate(self) -> float:
         if len(self.arrivals) < 2:
@@ -99,6 +112,7 @@ class GlobalMonitor:
         s = Snapshot(t, self.queue_len, self.decode_pool,
                      self.in_flight_tokens, self.arrival_rate(),
                      self.mean_seq_len(), self.n_buckets, self.kv_util(),
-                     self.prefix_hit_rate(), self.prefix_pages_saved)
+                     self.prefix_hit_rate(), self.prefix_pages_saved,
+                     self.session_hits, self.session_hit_tokens)
         self.history.append(s)
         return s

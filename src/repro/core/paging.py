@@ -180,18 +180,25 @@ def admit_blocks(alloc: BlockAllocator, requests: Sequence,
     (prompt + the first decode write, window-capped).  The loop re-queues
     the rest — the block analogue of the decode-slot clamp.
 
-    With a :class:`~repro.core.prefix_cache.PrefixCache` (``cache`` +
-    ``tokens_of``), each request's prompt is first matched against the
-    radix index: matched pages are attached by REFERENCE (refcount++)
-    and only the uncached suffix is charged to the free list.  On
-    exhaustion, LRU zero-ref cached prefixes are evicted before giving
-    up — admission starvation reclaims cold cache before it blocks."""
+    ``cache`` (+ ``tokens_of``) is any retention object speaking the
+    shared cache protocol — a bare
+    :class:`~repro.core.prefix_cache.PrefixCache` or the full
+    :class:`~repro.core.retention.KvRetention` layer.  Each request's
+    prompt is first matched against it: matched pages (a cached radix
+    run, plus the session's pinned partial tail when the prompt
+    continues a retained transcript) are attached by REFERENCE
+    (refcount++) and only the uncached suffix is charged to the free
+    list.  On exhaustion the cache's ordered eviction policy (expired
+    sessions → LRU cold prefixes → live sessions) runs before giving
+    up — admission starvation reclaims retained cache before it
+    blocks.  ``note_admit`` commits a session claim on success;
+    ``abort`` rolls it back on failure."""
     n = 0
     for r in requests:
         shared: List[int] = []
         hit_tokens = 0
         if cache is not None:
-            shared, hit_tokens = cache.lookup(tokens_of(r))
+            shared, hit_tokens = cache.lookup(tokens_of(r), req=r)
         while True:
             got = alloc.alloc(r.rid, insert_tokens(r), shared=shared)
             if got is not None or cache is None:
@@ -201,10 +208,12 @@ def admit_blocks(alloc: BlockAllocator, requests: Sequence,
             if cache.evict(alloc, short, protect=shared) == 0:
                 break
         if got is None:
+            if cache is not None:
+                cache.abort(r)
             break
         if cache is not None:
             r.prefix_hit_tokens = hit_tokens
-            cache.note_admit(alloc, hit_tokens)
+            cache.note_admit(alloc, r, hit_tokens)
         n += 1
     return n
 
@@ -214,8 +223,10 @@ def extend_for_decode(alloc: BlockAllocator, pool: Sequence,
                       cache=None) -> List:
     """Pre-decode page extension with preemption: grow every pooled
     request's table to cover its next token write; on exhaustion free
-    pages in cheapness order — (1) evict an LRU zero-ref cached prefix
-    (nobody loses work), then (2) preempt a strictly YOUNGER pooled
+    pages in cheapness order — (1) the cache's ordered retention
+    policy (expired session tails, then LRU zero-ref cached prefixes,
+    then live session tails — nobody in flight loses work, see
+    ``KvRetention.evict``), then (2) preempt a strictly YOUNGER pooled
     request, preferring the one whose release RECLAIMS the most pages
     (a victim whose pages are all shared frees nothing and is never
     picked), tie-broken by youngest (latest arrival, then highest rid).

@@ -98,10 +98,12 @@ class PrefixCache:
         return [n.page for n in self._nodes]
 
     # ------------------------------------------------------------ lookup --
-    def lookup(self, tokens) -> Tuple[List[int], int]:
+    def lookup(self, tokens, req=None) -> Tuple[List[int], int]:
         """Longest cached page run for ``tokens``, capped so at least
         one suffix token remains to prefill.  Returns (pages, tokens
-        matched); touches the path for LRU."""
+        matched); touches the path for LRU.  ``req`` is part of the
+        shared cache protocol (core/retention.py keys session state on
+        it) and is unused here."""
         tokens = np.asarray(tokens)
         usable_cap = (len(tokens) - 1) // self.page_size
         node, pages = self.root, []
@@ -202,16 +204,22 @@ class PrefixCache:
         return freed
 
     # ------------------------------------------------------------- stats --
-    def note_admit(self, alloc, hit_tokens: int) -> None:
+    def note_admit(self, alloc, req, hit_tokens: int) -> None:
         """Called by ``paging.admit_blocks`` once per ADMITTED request
         (counting only admissions keeps engine/cost-model hit counts
-        comparable — both admit identical batches under parity)."""
+        comparable — both admit identical batches under parity).
+        ``req`` is part of the shared cache protocol (the retention
+        layer commits its session claim here) and is unused."""
         self.stats.lookups += 1
         if hit_tokens > 0:
             self.stats.hits += 1
             self.stats.hit_tokens += hit_tokens
         self.stats.peak_shared = max(self.stats.peak_shared,
                                      alloc.shared_pages())
+
+    def abort(self, req) -> None:
+        """Admission failed after ``lookup`` — nothing to roll back for
+        the bare radix (protocol hook for the retention layer)."""
 
     def pages_saved(self) -> int:
         return self.stats.hit_tokens // self.page_size

@@ -24,11 +24,33 @@ class Request:
     slo_tpot: float = 0.2                # time-per-output-token SLO (s)
     tokens: Optional[np.ndarray] = None  # actual token ids (real engine)
 
+    # --- multi-turn sessions (core/retention.py) ---
+    # Turn t (> 0) of a conversation: its prompt is the FULL transcript
+    # of turns 0..t-1 (prompt + generated tokens) followed by this
+    # turn's new user ``utterance``.  The transcript part cannot be
+    # known until the previous turn finishes, so ``tokens`` stays None
+    # and the ServingLoop composes it at unlock time; ``prompt_len`` IS
+    # known up front (the loop always generates exactly
+    # ``max_new_tokens``), which keeps batch formation deterministic.
+    session_id: Optional[int] = None     # conversation key (None = one-shot)
+    turn: int = 0                        # 0-based turn index in the session
+    think_gap: float = 0.0               # arrival delay after prior finish
+    utterance: Optional[np.ndarray] = None  # this turn's NEW user tokens
+    history_tokens: int = 0              # leading prompt tokens that are
+    #                                      prior transcript (0 for turn 0)
+
     # --- lifecycle (filled by scheduler/engine) ---
     # prompt tokens served from the cross-request prefix cache at the
-    # LAST admission (page-aligned; 0 = cold).  Set by
-    # paging.admit_blocks, reset when a preemption re-queues the request.
+    # LAST admission (page-aligned unless a session tail was restored;
+    # 0 = cold).  Set by paging.admit_blocks, reset when a preemption
+    # re-queues the request.
     prefix_hit_tokens: int = 0
+    # transcript tokens restored from the SESSION table at the last
+    # admission (includes the pinned partial tail; 0 = no session hit)
+    session_hit_tokens: int = 0
+    # padded prompt tokens this request actually ran through the
+    # prefill executor (accumulates across preemption restarts)
+    prefilled_tokens: int = 0
     prefill_start: float = -1.0
     first_token: float = -1.0
     finished: float = -1.0
@@ -60,8 +82,13 @@ class Request:
         """Fill in concrete prompt token ids when the workload supplied
         none.  THE one seeding rule shared by every execution backend —
         the prefix cache's radix index keys on these ids, so any drift
-        between backends would silently break hit-count parity."""
-        if self.tokens is None:
+        between backends would silently break hit-count parity.
+
+        A later session turn (``utterance`` set, ``tokens`` None) is
+        deliberately left alone: its prompt is the prior transcript +
+        utterance, composed by the ServingLoop when the previous turn
+        finishes — random ids here would break transcript reuse."""
+        if self.tokens is None and self.utterance is None:
             rng = np.random.default_rng(self.rid)
             self.tokens = rng.integers(
                 0, vocab_size, self.prompt_len).astype(np.int32)

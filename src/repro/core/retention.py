@@ -1,0 +1,286 @@
+"""Unified KV retention: one end-of-life policy for every cached page.
+
+Before this layer, "a request finished" meant "free its pages" — with
+one ad-hoc exception (the prefix cache pinned FULL prompt pages at
+prefill time) and no way to keep a *conversation's* cache alive between
+turns.  BucketServe's motivating traffic is exactly the workload where
+that hurts: agentic/chat sessions re-send the whole transcript every
+turn, so turn N+1 re-prefills tokens whose KV was in the pool seconds
+ago (Apt-Serve arXiv 2504.07494, UELLM arXiv 2409.14961).
+
+:class:`KvRetention` makes "free on release" one case of a general
+retention policy (DESIGN.md §3 "Session retention"):
+
+* the PR 3 radix index (:class:`~repro.core.prefix_cache.PrefixCache`)
+  becomes the SHARED-PREFIX BACKEND.  At release, the finished
+  request's full transcript — prompt AND generated tokens — is
+  registered: page content is a pure function of the token path (RoPE
+  uses absolute positions), so generated tokens simply EXTEND the
+  radix path past the prompt.  Any later request whose prompt walks
+  the same token path (most importantly the session's own next turn)
+  reuses those pages by reference;
+* a SESSION TABLE holds the one page the radix cannot: the partial
+  tail (``transcript_len % page`` tokens).  It stays pinned PRIVATELY
+  under the session key with a TTL; the next turn of the same session
+  — after verifying its prompt continues the exact transcript token
+  path — takes the pin over (the tail becomes its private page at the
+  right virtual index) and prefill resumes past the whole restored
+  transcript, not just its page-aligned prefix;
+* eviction pressure walks ONE ordered policy: expired session tails →
+  LRU cold radix prefixes → live session tails (soonest-expiring
+  first) → and only then does the caller fall back to refcount-aware
+  request preemption (``paging.extend_for_decode``).  A pinned session
+  is therefore always unpinned before any live request loses work.
+
+The layer owns the whole pin lifecycle (TTL tick, pressure unpin,
+release-time registration) — call sites in the loop/backends only
+forward their clock.  Both execution backends drive one instance
+through the shared ``paging.admit_blocks`` policy, so session hit
+counts cannot drift between the engine and the cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .prefix_cache import PrefixCache
+
+
+@dataclasses.dataclass
+class RetentionStats:
+    """Session-side accounting (the radix side lives in PrefixStats)."""
+
+    sessions_retained: int = 0   # release-time session entries created
+    session_lookups: int = 0     # admitted requests carrying a session id
+    session_hits: int = 0        # ... resumed from a live session entry
+    session_hit_tokens: int = 0  # transcript tokens restored via sessions
+    tail_reuses: int = 0         # pinned partial tail pages handed back
+    sessions_expired: int = 0    # entries dropped by the TTL tick
+    sessions_evicted: int = 0    # entries unpinned by memory pressure
+
+
+@dataclasses.dataclass
+class _Session:
+    """Retained transcript of one conversation's last finished turn."""
+
+    sid: int
+    turn: int
+    path: np.ndarray             # transcript token ids (len = T)
+    full_tokens: int             # page-aligned prefix registered on the radix
+    tail_page: Optional[int]     # pinned private partial tail (None if T%page==0)
+    expires_at: float
+    claimed_by: Optional[int] = None   # rid mid-admission (commit/abort pending)
+
+
+class KvRetention:
+    """Retention policy over a BlockAllocator: radix prefix backend +
+    TTL'd session table.  Duck-type-compatible with the ``cache``
+    argument of ``paging.admit_blocks`` / ``paging.extend_for_decode``
+    (lookup / evict / evict_one / note_admit / abort), which is how
+    both backends route their admit and eviction paths through it."""
+
+    def __init__(self, page_size: int,
+                 session_ttl: Optional[float] = None):
+        assert page_size > 0
+        self.page_size = page_size
+        self.session_ttl = session_ttl
+        self.prefix = PrefixCache(page_size)
+        self.sessions: Dict[int, _Session] = {}
+        self.stats = RetentionStats()
+        self._now = 0.0
+        # earliest expires_at across live entries (inf when none): the
+        # per-iteration TTL tick early-returns on it, so steady-state
+        # serving pays O(1) per tick, not O(live sessions)
+        self._next_expiry = math.inf
+
+    # ------------------------------------------------------------ queries --
+    @property
+    def sessions_enabled(self) -> bool:
+        return self.session_ttl is not None
+
+    def __len__(self) -> int:
+        return len(self.prefix)
+
+    def live_sessions(self) -> int:
+        return len(self.sessions)
+
+    # ------------------------------------------------------- pin lifecycle --
+    def tick(self, alloc, now: float) -> int:
+        """TTL maintenance, called by the backends each loop iteration:
+        drop every expired, unclaimed session entry.  Returns pages
+        actually freed (a tail with no other referent).  O(1) until the
+        earliest entry actually expires (cached watermark)."""
+        self._now = max(self._now, now)
+        if self._now < self._next_expiry:
+            return 0
+        freed = 0
+        for sid in [s for s, e in self.sessions.items()
+                    if e.claimed_by is None and e.expires_at <= self._now]:
+            freed += self._drop_session(alloc, sid, expired=True)
+        # claimed entries (transient, mid-admission) stay in the min so
+        # a later tick retries them after commit/abort resolves
+        self._next_expiry = min(
+            (e.expires_at for e in self.sessions.values()),
+            default=math.inf)
+        return freed
+
+    def _drop_session(self, alloc, sid: int, *, expired: bool) -> int:
+        e = self.sessions.pop(sid)
+        freed = 0
+        if e.tail_page is not None:
+            freed = int(alloc.unpin(e.tail_page))
+        if expired:
+            self.stats.sessions_expired += 1
+        else:
+            self.stats.sessions_evicted += 1
+        return freed
+
+    def on_release(self, alloc, req, path_tokens, now: float) -> int:
+        """End-of-life for a finished request's pages — the ONE place
+        release policy lives.  ``path_tokens`` is the transcript whose
+        KV the pool physically holds: prompt + generated[:-1] (the last
+        generated token's KV is never written).  Full pages go onto the
+        radix path; the partial tail is pinned under the session key
+        with a TTL; only then are the table's references dropped, so
+        retained pages survive.  Returns pages freed (like
+        ``BlockAllocator.release``); idempotent per rid."""
+        self._now = max(self._now, now)
+        if not alloc.holds(req.rid):
+            return 0
+        if not self.sessions_enabled or path_tokens is None:
+            return alloc.release(req.rid)
+        path = np.ascontiguousarray(path_tokens, dtype=np.int32)
+        table = alloc.table(req.rid)
+        T = min(len(path), len(table) * self.page_size)
+        full = T // self.page_size
+        if full:
+            self.prefix.register(alloc, path[:full * self.page_size], table)
+        sid = req.session_id
+        if sid is not None:
+            tail_page = table[full] if T % self.page_size else None
+            if tail_page is not None:
+                alloc.pin(tail_page)
+            old = self.sessions.pop(sid, None)
+            if old is not None and old.tail_page is not None:
+                alloc.unpin(old.tail_page)
+            expires = self._now + self.session_ttl
+            self.sessions[sid] = _Session(
+                sid=sid, turn=req.turn, path=path[:T],
+                full_tokens=full * self.page_size, tail_page=tail_page,
+                expires_at=expires)
+            self._next_expiry = min(self._next_expiry, expires)
+            self.stats.sessions_retained += 1
+        return alloc.release(req.rid)
+
+    # ------------------------------------------------- admission (lookup) --
+    def lookup(self, tokens, req=None) -> Tuple[List[int], int]:
+        """Longest retained run for ``tokens``: the radix walk first;
+        then, if the request belongs to a live unexpired session whose
+        transcript the prompt EXACTLY continues (token-path verified —
+        the tail's KV is only valid for that path) and the radix still
+        covers the whole page-aligned transcript (no gap), the pinned
+        tail extends the hit to the full transcript length.  The entry
+        is CLAIMED, not consumed — ``note_admit`` commits the claim
+        (pin hand-over) once the allocator accepted the request;
+        ``abort`` rolls it back if admission failed."""
+        tokens = np.asarray(tokens)
+        pages, hit = self.prefix.lookup(tokens)
+        sid = getattr(req, "session_id", None)
+        if sid is None or not self.sessions_enabled:
+            return pages, hit
+        e = self.sessions.get(sid)
+        if (e is None or e.claimed_by is not None
+                or e.expires_at <= self._now):
+            return pages, hit
+        T = len(e.path)
+        if (hit == e.full_tokens and len(tokens) > T
+                and np.array_equal(tokens[:T], e.path)):
+            e.claimed_by = req.rid
+            req.session_hit_tokens = T
+            if e.tail_page is not None:
+                return pages + [e.tail_page], T
+        return pages, hit
+
+    def note_admit(self, alloc, req, hit_tokens: int) -> None:
+        """A request was ADMITTED (pages allocated): fold its hit into
+        the radix stats and commit any pending session claim — the
+        table now references the tail, so the session pin transfers
+        (unpin) and the entry is consumed."""
+        self.prefix.note_admit(alloc, req, hit_tokens)
+        sid = getattr(req, "session_id", None)
+        if sid is None or not self.sessions_enabled:
+            return
+        self.stats.session_lookups += 1
+        e = self.sessions.get(sid)
+        if e is None or e.claimed_by != req.rid:
+            return
+        del self.sessions[sid]
+        if e.tail_page is not None:
+            alloc.unpin(e.tail_page)
+            self.stats.tail_reuses += 1
+        self.stats.session_hits += 1
+        self.stats.session_hit_tokens += len(e.path)
+
+    def abort(self, req) -> None:
+        """Admission failed after ``lookup``: release the claim so the
+        session stays resumable (nothing was mutated yet)."""
+        sid = getattr(req, "session_id", None)
+        if sid is None:
+            return
+        e = self.sessions.get(sid)
+        if e is not None and e.claimed_by == req.rid:
+            e.claimed_by = None
+        req.session_hit_tokens = 0
+
+    # ---------------------------------------------------------- eviction --
+    def evict(self, alloc, need: int, protect=()) -> int:
+        """Free up to ``need`` pages along the ONE retention order:
+        (1) expired session tails (dead weight), (2) LRU cold radix
+        prefixes (nobody loses work), (3) live session tails, soonest-
+        expiring first (a session loses its resume, no live request
+        loses work).  The caller (``paging.extend_for_decode``) falls
+        back to request preemption only when all three come up empty —
+        sessions are therefore always unpinned before any live request
+        is preempted."""
+        protect = set(protect)
+        freed = self._evict_sessions(alloc, need, protect,
+                                     expired_only=True)
+        if freed < need:
+            freed += self.prefix.evict(alloc, need - freed, protect)
+        if freed < need:
+            freed += self._evict_sessions(alloc, need - freed, protect,
+                                          expired_only=False)
+        return freed
+
+    def evict_one(self, alloc, protect=()) -> bool:
+        return self.evict(alloc, 1, protect) > 0
+
+    def _evict_sessions(self, alloc, need: int, protect,
+                        expired_only: bool) -> int:
+        freed = 0
+        if need <= 0 or not self.sessions:
+            return 0
+        for sid, e in sorted(self.sessions.items(),
+                             key=lambda kv: kv[1].expires_at):
+            if freed >= need:
+                break
+            if (e.claimed_by is not None or e.tail_page is None
+                    or e.tail_page in protect
+                    or alloc.refs(e.tail_page) != 1):
+                continue
+            if expired_only and e.expires_at > self._now:
+                continue
+            expired = e.expires_at <= self._now
+            freed += self._drop_session(alloc, sid, expired=expired)
+        return freed
+
+    def clear(self, alloc) -> int:
+        """Unpin everything — every session tail, then the whole radix.
+        Returns pages freed."""
+        freed = 0
+        for sid in list(self.sessions):
+            freed += self._drop_session(alloc, sid, expired=False)
+        return freed + self.prefix.clear(alloc)

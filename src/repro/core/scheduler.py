@@ -100,9 +100,19 @@ class SchedulerBase:
 
     # -------------------------------------------------- decode admission --
     def _live_tokens(self, req: Request) -> int:
-        return self.batcher.charge_tokens(req.prompt_len
-                                          + req.max_new_tokens,
-                                          req.prefix_hit_tokens)
+        """In-flight KV tokens a live request is charged: prompt +
+        output, capped at the sliding/local window (a ring cache never
+        holds more than the window — EVERY scheduler serves windowed
+        configs, so the cap lives here in the base, not in a
+        policy-specific override that baselines silently miss),
+        page-granular under the paged memory model, discounted by the
+        shared prefix-cache hit."""
+        tokens = req.prompt_len + req.max_new_tokens
+        win = self.cfg.sliding_window or (
+            self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
+        if win:
+            tokens = min(tokens, win)
+        return self.batcher.charge_tokens(tokens, req.prefix_hit_tokens)
 
     def admit_decode(self, req: Request) -> None:
         self.monitor.decode_pool += 1
@@ -143,15 +153,18 @@ class BucketServeScheduler(SchedulerBase):
                                   self.monitor.in_flight_tokens)
 
     def _pick_bucket(self) -> Optional[Bucket]:
+        """Bucket choice per scheduling tick.  The earliest-online
+        arrival per bucket is maintained INCREMENTALLY by the
+        BucketManager (O(1) on add, recomputed only for buckets that
+        lose members) — the old ``min(r.arrival for r in b.requests)``
+        here rescanned every queued request in every bucket on every
+        tick, O(total queued) per tick."""
         nonempty = self.buckets.nonempty()
         if not nonempty:
             return None
-        online = [b for b in nonempty
-                  if any(r.task_type == TaskType.ONLINE for r in b.requests)]
+        online = [b for b in nonempty if b.earliest_online() is not None]
         if online:
-            return min(online, key=lambda b: min(
-                r.arrival for r in b.requests
-                if r.task_type == TaskType.ONLINE))
+            return min(online, key=lambda b: b.earliest_online())
         if self.sched.offline_policy == "sjf":
             return min(nonempty, key=lambda b: b.low)
         return max(nonempty, key=lambda b: b.up)
@@ -164,7 +177,7 @@ class BucketServeScheduler(SchedulerBase):
         b = self._pick_bucket()
         if b is None:
             return None
-        has_online = any(r.task_type == TaskType.ONLINE for r in b.requests)
+        has_online = b.earliest_online() is not None
         policy = "fcfs" if has_online else self.sched.offline_policy
         ordered = self.buckets.order_bucket(b, policy)
         batch = self.batcher.form_batch(ordered,
@@ -175,15 +188,6 @@ class BucketServeScheduler(SchedulerBase):
         self.buckets.pop(batch.requests)
         self.monitor.queue_len -= len(batch.requests)
         return batch
-
-    # -------------------------------------------------- decode admission --
-    def _live_tokens(self, req: Request) -> int:
-        tokens = req.prompt_len + req.max_new_tokens
-        win = self.cfg.sliding_window or (
-            self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)
-        if win:
-            tokens = min(tokens, win)
-        return self.batcher.charge_tokens(tokens, req.prefix_hit_tokens)
 
     # ------------------------------------------------------- KV transfer --
     def kv_transfer_seconds(self, batch: FormedBatch) -> float:

@@ -37,10 +37,14 @@ construction.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
 import time
-from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import (Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+import numpy as np
 
 from .batcher import FormedBatch
 from .request import Request
@@ -199,7 +203,22 @@ class ExecutionBackend(Protocol):
         padded batch context in ``static`` mode)."""
 
     def release(self, req: Request) -> None:
-        """A pooled request finished: free its slot/state."""
+        """A pooled request finished: end-of-life for its slot/state.
+        Retention-aware backends route this through
+        ``KvRetention.on_release`` (register the transcript's full
+        pages on the radix, pin the partial tail under the session key)
+        instead of freeing unconditionally."""
+
+    def generated_tokens(self, req: Request) -> "np.ndarray":
+        """Token ids this backend generated for ``req`` so far (the
+        engine's actual argmax outputs; the cost model's deterministic
+        synthetic ids).  The loop composes the next session turn's
+        prompt from them — each backend is self-consistent, which is
+        all transcript reuse needs."""
+
+    def maintain(self, now: float) -> None:
+        """Periodic housekeeping at clock time ``now`` (the retention
+        layer's session-TTL tick).  Called once per loop iteration."""
 
 
 # -------------------------------------------------------------- results ---
@@ -231,6 +250,14 @@ class ServeResult:
     prefix_pages_saved: int = 0
     prefix_evictions: int = 0
     shared_pages_peak: int = 0
+    # ---- session retention accounting (core/retention.py) ----
+    session_lookups: int = 0             # admitted requests with a session id
+    session_hits: int = 0                # ... resumed from a live entry
+    session_hit_tokens: int = 0          # transcript tokens restored
+    sessions_retained: int = 0           # release-time entries created
+    sessions_expired: int = 0            # TTL-tick unpins
+    sessions_evicted: int = 0            # pressure unpins
+    tail_pages_reused: int = 0           # pinned partial tails handed back
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -248,6 +275,9 @@ class ServeResult:
 
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(self.prefix_lookups, 1)
+
+    def session_hit_rate(self) -> float:
+        return self.session_hits / max(self.session_lookups, 1)
 
     def slo_attainment(self) -> float:
         if not self.requests:
@@ -314,7 +344,16 @@ class ServingLoop:
     # ------------------------------------------------------------- run ----
     def run(self, requests: List[Request], time_limit: float = 3600.0,
             max_wall_s: Optional[float] = None) -> ServeResult:
-        self._arrivals = sorted(requests, key=lambda r: r.arrival)
+        # Later session turns are HELD until their predecessor finishes
+        # — only then can their prompt (prior transcript + utterance) be
+        # composed and their arrival (finish + think gap) be known.
+        self._held: Dict[Tuple[int, int], Request] = {
+            (r.session_id, r.turn): r for r in requests
+            if r.session_id is not None and r.turn > 0}
+        self._arrivals = sorted(
+            (r for r in requests
+             if r.session_id is None or r.turn == 0),
+            key=lambda r: r.arrival)
         self._n = len(requests)
         self._max_wall_s = max_wall_s
         self.pool: List[Request] = []
@@ -338,6 +377,15 @@ class ServingLoop:
                          prefix_pages_saved=pc.pages_saved(),
                          prefix_evictions=pc.stats.evictions,
                          shared_pages_peak=pc.stats.peak_shared)
+        rt = getattr(self.backend, "retention", None)
+        if rt is not None:
+            extra.update(session_lookups=rt.stats.session_lookups,
+                         session_hits=rt.stats.session_hits,
+                         session_hit_tokens=rt.stats.session_hit_tokens,
+                         sessions_retained=rt.stats.sessions_retained,
+                         sessions_expired=rt.stats.sessions_expired,
+                         sessions_evicted=rt.stats.sessions_evicted,
+                         tail_pages_reused=rt.stats.tail_reuses)
         return ServeResult(
             requests=requests, makespan=self.backend.clock.now(),
             busy_prefill=st.busy_p, busy_decode=st.busy_d,
@@ -365,8 +413,11 @@ class ServingLoop:
         return self.backend.clock.now()
 
     def _admit_arrivals(self, now: float) -> None:
+        # _arrivals can be SHORTER than _n (held session turns join it
+        # only when their predecessor finishes) and can grow mid-run
         st = self.st
-        while st.ai < self._n and self._arrivals[st.ai].arrival <= now:
+        while st.ai < len(self._arrivals) \
+                and self._arrivals[st.ai].arrival <= now:
             r = self._arrivals[st.ai]
             self.sched.on_arrival(r, r.arrival if
                                   self.backend.clock.virtual else now)
@@ -394,10 +445,58 @@ class ServingLoop:
             if r.prompt_len + r.max_new_tokens > self.st.kv_budget:
                 r.dropped = True
                 r.finished = -1.0
-                self.st.done += 1
+                self._retire(r, now)
                 continue
             r.arrival = now + self.cfg.restart_penalty
             self.sched.on_arrival(r, r.arrival, requeue=True)
+
+    # ----------------------------------------------- sessions (retirement) --
+    def _retire(self, r: Request, end: float) -> None:
+        """A request left the system (finished or dropped): count it
+        done and, if it was a session turn, unlock the next one."""
+        self.st.done += 1
+        self._unlock_next_turn(r, end)
+
+    def _unlock_next_turn(self, r: Request, end: float) -> None:
+        """Compose and release the successor turn of ``r``'s session:
+        prompt = prior prompt + this turn's ACTUAL generated tokens +
+        the successor's utterance, arriving after the think-time gap.
+        Each backend supplies its own generated ids (the engine's real
+        argmax outputs, the cost model's deterministic synthetics), so
+        transcripts are self-consistent per substrate — which is what
+        makes a resumed turn's prefill skip bit-exact.  A dropped turn
+        cascades: its successors can never be composed."""
+        if r.session_id is None:
+            return
+        nxt = self._held.pop((r.session_id, r.turn + 1), None)
+        if nxt is None:
+            return
+        if r.dropped or r.finished < 0:
+            while nxt is not None:
+                nxt.dropped = True
+                nxt.finished = -1.0
+                self.st.done += 1
+                nxt = self._held.pop((r.session_id, nxt.turn + 1), None)
+            return
+        if r.tokens is not None and nxt.utterance is not None:
+            gen = np.asarray(self.backend.generated_tokens(r),
+                             dtype=np.int32)
+            prompt = np.concatenate([
+                np.asarray(r.tokens[:r.prompt_len], dtype=np.int32),
+                gen, nxt.utterance])
+            assert len(prompt) == nxt.prompt_len, \
+                (len(prompt), nxt.prompt_len, r.rid, nxt.rid)
+            nxt.tokens = prompt
+            nxt.history_tokens = r.prompt_len + len(gen)
+        nxt.arrival = end + max(nxt.think_gap, 0.0)
+        bisect.insort(self._arrivals, nxt, lo=self.st.ai,
+                      key=lambda q: q.arrival)
+
+    def _maintain(self, now: float) -> None:
+        """Backend housekeeping (session-TTL tick) once per iteration."""
+        m = getattr(self.backend, "maintain", None)
+        if m is not None:
+            m(now)
 
     def _form_batch(self, now: float, *,
                     count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
@@ -443,6 +542,8 @@ class ServingLoop:
         if pc is not None and mon is not None:
             for r in batch.requests:
                 mon.on_prefix_lookup(r.prefix_hit_tokens, pc.page_size)
+                if r.session_hit_tokens:
+                    mon.on_session_hit(r.session_hit_tokens)
         return batch, False
 
     def _account_prefill_batch(self, batch: FormedBatch,
@@ -472,6 +573,7 @@ class ServingLoop:
             r.first_token = -1.0
             r.prefill_start = -1.0
             r.prefix_hit_tokens = 0       # re-matched at the next admission
+            r.session_hit_tokens = 0
             r.arrival = now + self.cfg.restart_penalty
             self.sched.on_arrival(r, r.arrival, requeue=True)
             self.st.preempts += 1
@@ -483,13 +585,13 @@ class ServingLoop:
             r.generated += 1
             if r.generated >= r.max_new_tokens:
                 r.finished = end
-                self.st.done += 1
                 self.pool.remove(r)
                 self.backend.release(r)
                 self.sched.release_decode(r)
+                self._retire(r, end)
 
     def _next_arrival(self) -> Optional[float]:
-        if self.st.ai < self._n:
+        if self.st.ai < len(self._arrivals):
             return self._arrivals[self.st.ai].arrival
         return None
 
@@ -505,6 +607,7 @@ class ServingLoop:
             if self._wall_exceeded():
                 break
             now = clock.now()
+            self._maintain(now)
             self._admit_arrivals(now)
             self._process_joins(now)
 
@@ -565,6 +668,8 @@ class ServingLoop:
         st.busy_p += dur
         st.t_pre += dur * batch.size
         st.prefill_tok += job.chunks[idx][1] * batch.size
+        for r in batch.requests:
+            r.prefilled_tokens += job.chunks[idx][1]
 
         if job.done:
             # a chunk plan starting past 0 skipped a cached prefix: those
@@ -579,8 +684,8 @@ class ServingLoop:
                 if r.generated >= r.max_new_tokens \
                         or not self.backend.supports_decode:
                     r.finished = end
-                    st.done += 1
-                    self.backend.release(r)     # frees admitted KV pages
+                    self.backend.release(r)     # retention/free of KV pages
+                    self._retire(r, end)
                 else:
                     # KV allocated AT PREFILL: account it now so the
                     # batcher's Eq. (6) sees in-transfer caches too
@@ -623,6 +728,7 @@ class ServingLoop:
             if self._wall_exceeded():
                 break
             now = clock.now()
+            self._maintain(now)
             self._admit_arrivals(now)
 
             batch = None
@@ -674,6 +780,8 @@ class ServingLoop:
                 st.busy_p += pdt
                 st.t_pre += pdt * batch.size
                 st.prefill_tok += batch.pad_to * batch.size
+                for r in batch.requests:
+                    r.prefilled_tokens += batch.pad_to
                 self._account_prefill_batch(batch)
             if n_pool:
                 st.busy_d += ddt
@@ -687,8 +795,8 @@ class ServingLoop:
                     if r.generated >= r.max_new_tokens \
                             or not self.backend.supports_decode:
                         r.finished = end
-                        st.done += 1
                         self.backend.release(r)
+                        self._retire(r, end)
                     else:
                         self.pool.append(r)
                         sched.admit_decode(r)
@@ -710,6 +818,8 @@ class ServingLoop:
         st.busy_p += pdt
         st.t_pre += pdt * n
         st.prefill_tok += pad * n
+        for r in batch.requests:
+            r.prefilled_tokens += pad
         self._account_prefill_batch(batch)
         t = self._after(now, pdt)
         for r in batch.requests:
@@ -735,7 +845,7 @@ class ServingLoop:
         for r in batch.requests:
             if r.finished < 0:
                 r.finished = t
-            st.done += 1
             sched.release_decode(r)
             self.backend.release(r)
+            self._retire(r, t)
         clock.advance(t)

@@ -29,11 +29,14 @@ from typing import List, Optional, Sequence, Tuple
 
 import math
 
+import numpy as np
+
 from repro.models.config import ModelConfig
 from . import paging
 from .batcher import FormedBatch
 from .prefix_cache import PrefixCache
 from .request import Request
+from .retention import KvRetention
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
                            VirtualClock, batch_prefix_skip, plan_chunks)
 
@@ -155,19 +158,22 @@ class CostModelBackend:
                  page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
                  cache_len: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 session_ttl: Optional[float] = None):
         self.cost = cost
         self.clock = VirtualClock()
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.flops_per_token = 2.0 * cost.p_active
-        self.prefix_cache: Optional[PrefixCache] = None
+        self.session_ttl = session_ttl
+        self.retention: Optional[KvRetention] = None
+        prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
-            assert paged, "prefix cache rides on the paged KV pool"
+            assert paged, "KV retention rides on the paged KV pool"
             assert cost.cfg.prefix_cacheable, \
-                f"{cost.cfg.name}: prefix cache needs chunk-resumable " \
+                f"{cost.cfg.name}: KV retention needs chunk-resumable " \
                 "prefill and purely attention-paged state"
-            self.prefix_cache = PrefixCache(page_size)
+            self.retention = KvRetention(page_size, session_ttl=session_ttl)
         if paged:
             # block accounting REPLACES the token-budget OOM check
             self._kv_budget = math.inf
@@ -192,21 +198,33 @@ class CostModelBackend:
         else:
             self._kv_budget = kv_budget
 
+    @property
+    def prefix_cache(self) -> Optional[PrefixCache]:
+        """The retention layer's radix backend (None when disabled) —
+        the surface older call sites and tests address."""
+        return self.retention.prefix if self.retention is not None else None
+
     def begin(self, requests: Sequence[Request]) -> None:
         self.clock = VirtualClock()
         if self.paged:
             self.alloc = paging.BlockAllocator(self.alloc.n_pages,
                                                self.page_size)
-        if self.prefix_cache is not None:
-            self.prefix_cache = PrefixCache(self.page_size)
+        if self.retention is not None:
+            self.retention = KvRetention(self.page_size,
+                                         session_ttl=self.session_ttl)
             # the radix index keys on ACTUAL token ids: materialize them
-            # through the one shared rule (Request.materialize_tokens)
+            # through the one shared rule (Request.materialize_tokens —
+            # which leaves later session turns for the loop to compose)
             # so both backends make identical hit/miss decisions
             for r in requests:
                 r.materialize_tokens(self.cost.cfg.vocab_size)
 
     def kv_budget_tokens(self) -> float:
         return self._kv_budget
+
+    def maintain(self, now: float) -> None:
+        if self.retention is not None and self.paged:
+            self.retention.tick(self.alloc, now)
 
     def free_slots(self) -> int:          # pragma: no cover - not consulted
         return 1 << 30
@@ -225,7 +243,7 @@ class CostModelBackend:
         if not self.paged:
             return len(requests)
         return paging.admit_blocks(self.alloc, requests, self._insert_tokens,
-                                   cache=self.prefix_cache,
+                                   cache=self.retention,
                                    tokens_of=self._prompt_tokens)
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
@@ -233,7 +251,7 @@ class CostModelBackend:
             return []
         return paging.extend_for_decode(self.alloc, pool,
                                         self._decode_tokens,
-                                        cache=self.prefix_cache)
+                                        cache=self.retention)
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         # same gate as the real engine (cfg.chunkable_prefill) so the two
@@ -268,8 +286,39 @@ class CostModelBackend:
         return self.cost.decode_iter_seconds(context_tokens, len(pool))
 
     def release(self, req: Request) -> None:
-        if self.paged:
+        if not self.paged:
+            return
+        # retention applies only to decode-continuing requests — the
+        # engine never scatters a first-token-only row's KV into the
+        # pool, so retaining it here would break hit-count parity
+        if self.retention is not None and req.max_new_tokens > 1 \
+                and self.cost.cfg.has_decode:
+            self.retention.on_release(self.alloc, req,
+                                      self._transcript_tokens(req),
+                                      self.clock.now())
+        else:
             self.alloc.release(req.rid)
+
+    def _transcript_tokens(self, req: Request) -> Optional[np.ndarray]:
+        """Mirror of the engine's rule: the pool holds KV for the
+        prompt plus generated[:-1]."""
+        if req.tokens is None:
+            return None
+        gen = self.generated_tokens(req)[:max(req.generated - 1, 0)]
+        return np.concatenate(
+            [np.asarray(req.tokens[:req.prompt_len], np.int32), gen])
+
+    def generated_tokens(self, req: Request) -> np.ndarray:
+        """Deterministic SYNTHETIC generated ids — the cost model runs
+        no model, but session transcripts must still be concrete token
+        paths.  Seeded per rid (disjoint from the prompt
+        materialization rule), so regenerating the same request yields
+        the same transcript: hit counts stay reproducible and in
+        parity with the engine's (whose ids differ but whose
+        transcript STRUCTURE is identical)."""
+        rng = np.random.default_rng([req.rid, 0xD3C0DE])
+        return rng.integers(0, self.cost.cfg.vocab_size,
+                            req.generated).astype(np.int32)
 
 
 # ------------------------------------------------------------ simulator ---
@@ -294,8 +343,10 @@ class Simulator:
                  paged: bool = False, page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
                  cache_len: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 session_ttl: Optional[float] = None):
         assert mode in ("disagg", "coupled", "static")
+        prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
         # decode_preempt extends, so paged accounting would silently
         # understate the live footprint — refuse the combination
@@ -317,7 +368,7 @@ class Simulator:
             cost, kv_budget=cost.kv_budget_tokens(chips),
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
             kv_pool_tokens=kv_pool_tokens, cache_len=cache_len,
-            prefix_cache=prefix_cache)
+            prefix_cache=prefix_cache, session_ttl=session_ttl)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick))

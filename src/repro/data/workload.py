@@ -18,6 +18,20 @@ traffic shape) and appends a per-request random suffix drawn from the
 dataset's length distribution.  Requests carrying tokens flow through
 both execution backends unchanged, so the engine and the cost model
 see bit-identical prompts.
+
+Multi-turn conversation family (PR 4, for the session retention layer,
+core/retention.py): ``sessions > 0`` generates ``sessions x turns``
+requests.  Turn 0 of a session is a normal materialized prompt; turn
+t > 0 re-sends the FULL transcript (previous prompt + generated
+tokens) followed by a fresh user ``utterance`` — the standard chat
+transcript-growth shape.  The transcript part cannot be sampled here
+(generated ids are the serving backend's to produce), so later turns
+carry only their utterance and ``prompt_len``/``history_tokens``
+(lengths ARE known up front: the loop always generates exactly
+``max_new_tokens``); the ServingLoop composes the actual prompt ids
+when the previous turn finishes, after a per-turn think-time gap.
+Everything sampled here is seeded/deterministic, so the same spec
+regenerates bit-identical requests across calls and backends.
 """
 from __future__ import annotations
 
@@ -48,6 +62,13 @@ class WorkloadSpec:
     prefix_tokens: int = 256       # length of each shared prefix
     prefix_zipf: float = 1.2       # Zipf skew of prefix reuse (> 1)
     vocab_size: int = 32000        # id range for materialized tokens
+    # ---- multi-turn conversation family (0 = single-shot requests) ----
+    sessions: int = 0              # number of conversations (overrides
+    #                                n_requests: emits sessions x turns)
+    turns: int = 4                 # turns per conversation
+    think_time_s: float = 0.0      # mean think-time gap between turns
+    utterance_tokens: int = 0      # new-user-tokens per later turn
+    #                                (0 = sample the dataset distribution)
 
 
 def _sample_prompt_lens(rng, dataset: str, n: int, max_len: int):
@@ -84,8 +105,56 @@ def _sample_output_lens(rng, dataset: str, n: int):
     return np.clip(out, 4, 1024).astype(np.int64)
 
 
+def _generate_sessions(spec: WorkloadSpec, rng) -> List[Request]:
+    """sessions x turns transcript-growth requests (see module doc).
+    Every turn's prompt_len/max_new_tokens/utterance are sampled HERE
+    (deterministic); only the transcript token ids of turns > 0 are
+    composed later by the ServingLoop from actual generated output."""
+    assert spec.turns >= 1
+    starts = np.cumsum(rng.exponential(1.0 / max(spec.rps, 1e-9),
+                                       spec.sessions))
+    reqs: List[Request] = []
+    rid = 0
+    for s in range(spec.sessions):
+        transcript = 0                      # tokens of turns 0..t-1
+        for t in range(spec.turns):
+            # keep the whole conversation inside the model window: the
+            # utterance and output budgets shrink as the transcript
+            # grows, and a session whose transcript has exhausted the
+            # window simply ENDS early (every emitted turn satisfies
+            # prompt_len + max_new_tokens <= max_model_len — an
+            # oversized turn could never be served)
+            room = spec.max_model_len - transcript - 2
+            if room < 1:
+                break
+            if spec.utterance_tokens > 0:
+                ulen = spec.utterance_tokens
+            else:
+                ulen = int(_sample_prompt_lens(
+                    rng, spec.dataset if t == 0 else "alpaca", 1,
+                    spec.max_model_len)[0])
+            ulen = max(1, min(ulen, room))
+            out = int(spec.max_new_tokens
+                      or _sample_output_lens(rng, spec.dataset, 1)[0])
+            out = max(1, min(out, spec.max_model_len - transcript - ulen))
+            utter = rng.integers(0, spec.vocab_size, ulen).astype(np.int32)
+            gap = float(rng.exponential(spec.think_time_s)) if t else 0.0
+            reqs.append(Request(
+                rid=rid, prompt_len=transcript + ulen, max_new_tokens=out,
+                arrival=float(starts[s]), task_type=spec.task_type,
+                slo_ttft=spec.slo_ttft, slo_tpot=spec.slo_tpot,
+                tokens=utter if t == 0 else None,
+                session_id=s, turn=t, think_gap=gap, utterance=utter,
+                history_tokens=transcript))
+            transcript += ulen + out            # next turn's history
+            rid += 1
+    return reqs
+
+
 def generate(spec: WorkloadSpec) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
+    if spec.sessions > 0:
+        return _generate_sessions(spec, rng)
     n = spec.n_requests
     gaps = rng.exponential(1.0 / max(spec.rps, 1e-9), n)
     arrivals = np.cumsum(gaps)

@@ -15,6 +15,14 @@ model instead — both are ExecutionBackends under one ServingLoop
 (core/serving_loop.py), which is how the cost model's scheduling
 behaviour is validated against real execution.
 
+``--sessions N --turns T`` serves a multi-turn conversation workload
+through the KV retention layer (core/retention.py): each finished
+turn's transcript stays retained (full pages on the radix, partial
+tail pinned under the session key for ``--session-ttl`` seconds) and
+the next turn of the same conversation resumes past it instead of
+re-prefilling (DESIGN.md §3 "Session retention"; implies
+--prefix-cache and therefore --paged).
+
 On this CPU container use --smoke (reduced config, real execution).  On
 a TPU slice the same entrypoint loads the full config, registers the
 production mesh (sharding/context.py) and shards params with
@@ -56,7 +64,8 @@ def _run_sim(cfg, args, reqs):
                     decode_slot_cap=args.slots, chunk_tokens=args.chunk,
                     paged=args.paged, page_size=args.page_size,
                     kv_pool_tokens=args.pool_tokens,
-                    prefix_cache=args.prefix_cache)
+                    prefix_cache=args.prefix_cache,
+                    session_ttl=args.session_ttl if args.sessions else None)
     res = sim.run(reqs)
     prefix_info = ""
     if args.prefix_cache:
@@ -64,6 +73,12 @@ def _run_sim(cfg, args, reqs):
                        f"({res.prefix_hit_rate():.2f}), "
                        f"{res.prefill_tokens_skipped} prompt tokens "
                        f"skipped, {res.prefix_pages_saved} pages saved; ")
+    if args.sessions:
+        prefix_info += (
+            f"session hits {res.session_hits}/{res.session_lookups}, "
+            f"{res.session_hit_tokens} transcript tokens restored, "
+            f"{res.tail_pages_reused} tails reused, "
+            f"{res.sessions_expired} expired; ")
     print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
           f"{res.makespan:.2f} virtual s; {res.throughput_tok_s():.0f} tok/s; "
           f"SLO {res.slo_attainment():.2f}; OOM {res.oom_events}; "
@@ -97,6 +112,15 @@ def main():
     ap.add_argument("--prefix-tokens", type=int, default=128,
                     help="tokens per shared system prompt (with "
                          "--prefix-scenarios)")
+    ap.add_argument("--sessions", type=int, default=0,
+                    help="multi-turn conversation workload: N sessions "
+                         "of --turns turns each; enables the session "
+                         "retention layer (implies --prefix-cache)")
+    ap.add_argument("--turns", type=int, default=3,
+                    help="turns per session (with --sessions)")
+    ap.add_argument("--session-ttl", type=float, default=60.0,
+                    help="seconds a finished conversation's KV stays "
+                         "pinned awaiting the next turn")
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="total pooled KV tokens (default: slots x "
                          "cache_len — the contiguous pool's budget — on "
@@ -111,6 +135,7 @@ def main():
     ap.add_argument("--trigger", default="waste",
                     choices=["majority", "waste"])
     args = ap.parse_args()
+    args.prefix_cache = args.prefix_cache or args.sessions > 0
     args.paged = args.paged or args.prefix_cache
 
     if args.smoke:
@@ -121,16 +146,28 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only; serve prefill-only "
                          "workloads via max_new_tokens=1")
 
-    spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
-                        n_requests=args.requests,
-                        max_model_len=cfg.max_seq_len,
-                        prefix_groups=args.prefix_scenarios,
-                        prefix_tokens=args.prefix_tokens,
-                        vocab_size=cfg.vocab_size)
-    reqs = generate(spec)
-    for r in reqs:   # keep CPU smoke runs short
-        r.max_new_tokens = min(r.max_new_tokens, 8)
-        r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
+    if args.sessions:
+        # multi-turn conversations: lengths are sized to FIT the
+        # window up front (a later clamp would break the loop's
+        # transcript composition, which must hit prompt_len exactly)
+        per_turn = max(cfg.max_seq_len // (2 * args.turns) - 8, 8)
+        spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
+                            max_model_len=cfg.max_seq_len,
+                            vocab_size=cfg.vocab_size,
+                            sessions=args.sessions, turns=args.turns,
+                            utterance_tokens=per_turn, max_new_tokens=8)
+        reqs = generate(spec)
+    else:
+        spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
+                            n_requests=args.requests,
+                            max_model_len=cfg.max_seq_len,
+                            prefix_groups=args.prefix_scenarios,
+                            prefix_tokens=args.prefix_tokens,
+                            vocab_size=cfg.vocab_size)
+        reqs = generate(spec)
+        for r in reqs:   # keep CPU smoke runs short
+            r.max_new_tokens = min(r.max_new_tokens, 8)
+            r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
 
     if args.backend == "sim":
         _run_sim(cfg, args, reqs)
@@ -157,7 +194,9 @@ def main():
                            moe_impl="local", chunk_tokens=args.chunk,
                            paged=args.paged, page_size=args.page_size,
                            kv_pool_tokens=args.pool_tokens,
-                           prefix_cache=args.prefix_cache)
+                           prefix_cache=args.prefix_cache,
+                           session_ttl=args.session_ttl if args.sessions
+                           else None)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -178,6 +217,13 @@ def main():
                 f"({r.prefix_hit_rate():.2f}), {r.prefill_tokens_skipped} "
                 f"prompt tokens skipped, {r.prefix_pages_saved} pages "
                 f"saved, {r.shared_pages_peak} peak shared; ")
+        if args.sessions:
+            r = engine.result
+            paged_info += (
+                f"session hits {r.session_hits}/{r.session_lookups}, "
+                f"{r.session_hit_tokens} transcript tokens restored, "
+                f"{r.tail_pages_reused} tails reused, "
+                f"{r.sessions_retained} retained; ")
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.1f}s; prefill shapes: {engine.n_prefill_shapes}; "
           f"decode steps interleaved between prefill chunks: "
