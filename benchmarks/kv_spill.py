@@ -1,0 +1,125 @@
+"""Host-RAM KV spill tier: cold vs unpin vs spill under one HBM budget.
+
+Beyond-paper table (PR 5, DESIGN.md §3 "Host spill tier"): the paged
+cost model serves the SAME multi-turn conversation workload three times
+under an HBM pool deliberately too small to retain every session —
+
+* ``cold``  — paged pool only, no retention: every turn re-prefills its
+  whole transcript (the pre-PR-3 floor);
+* ``unpin`` — PR 4 retention: radix + session tails, but eviction under
+  pressure DESTROYS retained pages, so squeezed-out sessions pay a full
+  re-prefill on their next turn;
+* ``spill`` — the host tier: the same eviction pressure COPIES cold
+  retained pages to host RAM and the next turn restores them over the
+  modeled PCIe link instead of re-prefilling.
+
+CI gates: (1) the spill run must re-prefill STRICTLY FEWER prompt
+tokens than the unpin run — the delta is exactly what the host tier
+buys, so a dead spill/restore path cannot hide behind PR 4 savings;
+(2) every run's composed prompts (transcripts are built from each
+run's own generated ids) must be BIT-IDENTICAL across the three modes
+— a restore that corrupted or clamped transcripts would show up here.
+The harness (benchmarks/run.py) exits nonzero on the AssertionError.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.batcher import MemoryBudget
+from repro.core.request import TaskType
+from repro.core.scheduler import BucketServeScheduler, SchedulerConfig
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.data.workload import WorkloadSpec, generate
+
+from .common import CFG, emit
+
+PAGE = 128
+
+
+def _run(spec: WorkloadSpec, *, session_ttl, host_pool_tokens,
+         pool_tokens: int, slots: int, prefix_cache: bool = True):
+    reqs = generate(spec)
+    budget = MemoryBudget(hbm_bytes_per_device=A100X4.hbm_bytes,
+                          n_devices=A100X4.decode_chips,
+                          weight_bytes=CFG.param_count() * 2)
+    sched = BucketServeScheduler(CFG, budget, SchedulerConfig(
+        max_batch=slots, memory_model="paged", page_size=PAGE))
+    sim = Simulator(sched, CostModel(CFG, A100X4), mode="disagg",
+                    decode_slot_cap=slots, paged=True, page_size=PAGE,
+                    kv_pool_tokens=pool_tokens, prefix_cache=prefix_cache,
+                    session_ttl=session_ttl,
+                    host_pool_tokens=host_pool_tokens)
+    t0 = time.perf_counter()
+    res = sim.run(reqs, time_limit=14400.0)
+    ids = {}
+    for r in res.requests:
+        ids[r.rid] = None if r.tokens is None else r.tokens.tolist()
+    return res, ids, time.perf_counter() - t0
+
+
+def main(quick: bool = False) -> None:
+    sessions = 6 if quick else 24
+    turns = 3 if quick else 4
+    utter = 384 if quick else 512
+    slots = 8 if quick else 16
+    # the pool holds one max-length request plus a few transcripts:
+    # retention pressure is structural, not incidental
+    pool_tokens = (40 if quick else 128) * PAGE
+    host_tokens = 8 * pool_tokens
+    spec = WorkloadSpec(dataset="alpaca", rps=4.0, sessions=sessions,
+                        turns=turns, utterance_tokens=utter,
+                        max_new_tokens=32 if quick else 64,
+                        think_time_s=2.0, task_type=TaskType.OFFLINE,
+                        max_model_len=CFG.max_seq_len, seed=0,
+                        vocab_size=CFG.vocab_size)
+    modes = [("cold", dict(session_ttl=None, host_pool_tokens=None,
+                           prefix_cache=False)),
+             ("unpin", dict(session_ttl=600.0, host_pool_tokens=None)),
+             ("spill", dict(session_ttl=600.0,
+                            host_pool_tokens=host_tokens))]
+    rows, by_mode, ids_by_mode = [], {}, {}
+    for name, kw in modes:
+        res, ids, wall = _run(spec, pool_tokens=pool_tokens, slots=slots,
+                              **kw)
+        by_mode[name] = res
+        ids_by_mode[name] = ids
+        rows.append([
+            "kv_spill", name, sessions, turns,
+            res.prefill_tokens_processed, res.prefill_tokens_skipped,
+            f"{res.session_hits}/{res.session_lookups}",
+            res.spilled_pages, res.restored_pages, res.restored_tokens,
+            res.spill_drops, res.spill_hold_events,
+            f"{res.restore_time_total:.3f}",
+            f"{res.output_tok_s():.1f}", f"{res.makespan:.2f}",
+            f"{wall:.1f}"])
+    emit(rows, ["table", "mode", "sessions", "turns", "prefill_tokens",
+                "tokens_skipped", "session_hits", "spilled_pages",
+                "restored_pages", "restored_tokens", "spill_drops",
+                "holds", "restore_s", "out_tok_s", "makespan_s",
+                "wall_s"])
+    # gate 2: token ids identical across all three modes (the cost
+    # model composes transcripts from deterministic per-rid synthetic
+    # generated ids, so any divergence means a run clamped/corrupted a
+    # transcript)
+    for name in ("unpin", "spill"):
+        assert ids_by_mode[name] == ids_by_mode["cold"], \
+            f"{name} run changed token ids vs the cold run"
+    # gate 1: the host tier must buy real re-prefill work beyond unpin
+    unpin = by_mode["unpin"]
+    spill = by_mode["spill"]
+    assert spill.spilled_pages > 0 and spill.restored_pages > 0, \
+        "spill run moved no pages — the tier is dead under pressure"
+    assert spill.prefill_tokens_processed < unpin.prefill_tokens_processed, \
+        (f"spill run prefilled {spill.prefill_tokens_processed} >= the "
+         f"unpin run's {unpin.prefill_tokens_processed} prompt tokens — "
+         "the host tier added nothing over destructive eviction")
+    red = 1 - spill.prefill_tokens_processed / max(
+        unpin.prefill_tokens_processed, 1)
+    print(f"claim,prefill_token_reduction_vs_unpin,{red:.3f}")
+    print(f"claim,session_hit_rate_spill,{spill.session_hit_rate():.3f}")
+    print(f"claim,session_hit_rate_unpin,{unpin.session_hit_rate():.3f}")
+    print(f"claim,throughput_ratio_vs_unpin,"
+          f"{spill.output_tok_s() / max(unpin.output_tok_s(), 1e-9):.3f}")
+    print()

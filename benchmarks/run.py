@@ -15,7 +15,7 @@ import sys
 import time
 
 from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
-               fig6_overhead, kv_quant, prefix_cache, roofline,
+               fig6_overhead, kv_quant, kv_spill, prefix_cache, roofline,
                session_reuse, waste_model)
 
 TABLES = {
@@ -28,6 +28,7 @@ TABLES = {
     "kv_quant": kv_quant.main,             # beyond-paper: int8 KV cache
     "prefix_cache": prefix_cache.main,     # beyond-paper: prefix sharing
     "session_reuse": session_reuse.main,   # beyond-paper: session resume
+    "kv_spill": kv_spill.main,             # beyond-paper: host spill tier
     "roofline": roofline.main,             # §Roofline (dry-run derived)
 }
 

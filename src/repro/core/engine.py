@@ -58,6 +58,16 @@ the EXACT unaligned token, and resumes chunked prefill past the
 restored transcript — decode then continues into the reused tail page
 without a re-scatter of the transcript's pages.
 
+Host spill tier (``host_pool_tokens``, DESIGN.md §3 "Host spill
+tier"): retention eviction SPILLS cold retained pages to a host-RAM
+pool instead of destroying them — ``_EngineCopier`` captures the
+page's K/V as immutable device-side slices at eviction time and
+materializes them to host on the next ``maintain`` poll (double
+buffered, overlapping decode); a later hit on a spilled path restores
+the bytes into a reserved pool page while the ServingLoop parks the
+request, so the next turn pays a PCIe copy instead of a re-prefill,
+bit-identically.
+
 Chunked prefill (DESIGN.md §2): long prompts are split into
 ``chunk_tokens``-sized spans; the serving loop interleaves decode
 iterations between spans, so a 2k-token prefill no longer stalls every
@@ -79,9 +89,145 @@ from . import paging
 from .batcher import FormedBatch
 from .prefix_cache import PrefixCache
 from .request import Request
-from .retention import KvRetention
+from .retention import KvRetention, maintain_backend
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
                            WallClock, batch_prefix_skip, plan_chunks)
+
+
+class _BlockTableMirror:
+    """Host mirror of the device block-table tensor.
+
+    ``decode_preempt`` used to rescan every pooled request's FULL table
+    with ``np.array_equal`` on every dispatch — O(pool x pages_per_seq)
+    int32 compares per decode iteration whether or not anything grew.
+    The mirror tracks how many pages per rid are already uploaded and
+    writes only the newly appended suffix, so a steady-state iteration
+    where one request crosses a page boundary costs ONE cell write.
+    ``writes`` counts int32 cells written — the timing-free regression
+    hook tests compare against the rescanning reference."""
+
+    def __init__(self, n_slots: int, pages_per_seq: int, trash: int):
+        self.host = np.full((n_slots, pages_per_seq), trash, np.int32)
+        self.trash = trash
+        self.dirty = False
+        self._uploaded: Dict[int, int] = {}     # rid -> pages uploaded
+        self.writes = 0
+
+    def insert(self, slot: int, rid: int, table: Sequence[int]) -> None:
+        """A freshly prefilled request lands in ``slot``: full-row
+        write (its pages are all new to the device tensor)."""
+        self.host[slot] = self.trash
+        self.host[slot, :len(table)] = table
+        self.writes += self.host.shape[1]
+        self._uploaded[rid] = len(table)
+        self.dirty = True
+
+    def clear(self, slot: int, rid: int) -> None:
+        self.host[slot] = self.trash
+        self._uploaded.pop(rid, None)
+        self.writes += self.host.shape[1]
+        self.dirty = True
+
+    def forget(self, rid: int) -> None:
+        self._uploaded.pop(rid, None)
+
+    def sync(self, slot: int, rid: int, alloc) -> None:
+        """Write only the pages appended since the last upload —
+        O(growth), not O(table)."""
+        n0 = self._uploaded.get(rid, 0)
+        n1 = alloc.table_len(rid)
+        if n1 > n0:
+            self.host[slot, n0:n1] = alloc.table_tail(rid, n0)
+            self.writes += n1 - n0
+            self._uploaded[rid] = n1
+            self.dirty = True
+
+
+class _EngineCopier:
+    """Host<->device KV page mover for the real engine — the data half
+    of the spill tier (the retention layer makes every DECISION; this
+    object only moves bytes bit-exactly).
+
+    Double-buffered spill: ``spill`` captures the page's K/V as
+    device-side slices (JAX arrays are immutable values, so the capture
+    is safe the moment it is dispatched — the freed page can be
+    reallocated and overwritten without corrupting it) and the
+    device->host materialization into the preallocated host pool is
+    deferred to ``poll``, which the retention tick calls once per loop
+    iteration — so the copy overlaps decode instead of blocking the
+    step that evicted the page.  ``restore`` scatters the host copy
+    back into the reserved pool page at initiation (a functional
+    ``.at[].set`` — by the time the held request prefills, the gather
+    in ``_seed_prefix`` reads values bit-identical to the ones
+    spilled)."""
+
+    def __init__(self, backend: "JaxEngineBackend", host_pages: int):
+        self.be = backend
+        self.host_pages = host_pages
+        self._host: Dict[tuple, np.ndarray] = {}
+        self._staged: Dict[int, list] = {}      # hslot -> [(leafkey, slice)]
+        self._pending: List[Tuple[int, int]] = []   # (hslot, dest page)
+
+    def _attn_leaves(self):
+        for gi, (pattern, reps) in enumerate(self.be.cfg.block_groups()):
+            for j, btype in enumerate(pattern):
+                if btype in (BLOCK_ATTN, BLOCK_MOE):
+                    slot = self.be.pool_cache["groups"][gi][j]
+                    for k, leaf in slot.items():
+                        yield (gi, j, k), leaf
+
+    def _host_leaf(self, lk: tuple, like) -> np.ndarray:
+        h = self._host.get(lk)
+        if h is None:
+            h = np.zeros((like.shape[0], self.host_pages) + like.shape[1:],
+                         dtype=like.dtype)
+            self._host[lk] = h
+        return h
+
+    def spill(self, page: int, hslot: int) -> None:
+        self._staged[hslot] = [(lk, leaf[:, page])
+                               for lk, leaf in self._attn_leaves()]
+
+    def poll(self) -> None:
+        """Drain both directions (called by the retention tick, between
+        device steps): staged spills materialize to host RAM, then
+        pending restores scatter back with ONE batched pool update per
+        leaf — a per-page functional ``.at[].set`` would copy the whole
+        pool once per restored page.  The retention layer guarantees a
+        restore's pages are never read before its modeled completion,
+        and completion is polled through this same tick, so the scatter
+        always lands before the held request's prefill gathers it."""
+        for hslot, slices in self._staged.items():
+            for lk, sl in slices:
+                self._host_leaf(lk, sl)[:, hslot] = np.asarray(sl)
+        self._staged.clear()
+        if not self._pending:
+            return
+        hslots = [h for h, _ in self._pending]
+        dst = jnp.asarray([p for _, p in self._pending], jnp.int32)
+        self._pending = []
+        be = self.be
+        new_groups = []
+        for gi, (pattern, reps) in enumerate(be.cfg.block_groups()):
+            slots_out = []
+            for j, btype in enumerate(pattern):
+                slot = be.pool_cache["groups"][gi][j]
+                if btype in (BLOCK_ATTN, BLOCK_MOE):
+                    out = {}
+                    for k, leaf in slot.items():
+                        src = self._host[(gi, j, k)][:, hslots]
+                        out[k] = leaf.at[:, dst].set(jnp.asarray(src))
+                    slots_out.append(out)
+                else:
+                    slots_out.append(slot)
+            new_groups.append(tuple(slots_out))
+        be.pool_cache = {**be.pool_cache, "groups": tuple(new_groups)}
+
+    def drop(self, hslot: int) -> None:
+        self._staged.pop(hslot, None)   # host cells just become garbage
+
+    def restore(self, hslot: int, page: int) -> None:
+        self._pending.append((hslot, page))
 
 
 class JaxEngineBackend:
@@ -96,7 +242,9 @@ class JaxEngineBackend:
                  paged: bool = False, page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
                  prefix_cache: bool = False,
-                 session_ttl: Optional[float] = None):
+                 session_ttl: Optional[float] = None,
+                 host_pool_tokens: Optional[int] = None,
+                 spill_bw: float = 16e9):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -109,15 +257,26 @@ class JaxEngineBackend:
         self.paged = paged
         # retention layer (core/retention.py): the radix prefix index
         # plus, when session_ttl is set, TTL'd multi-turn session
-        # retention of finished transcripts
+        # retention of finished transcripts; host_pool_tokens adds the
+        # host-RAM spill tier beneath it (same transfer pricing rule as
+        # the cost model: page bytes over the host link)
         self.retention: Optional[KvRetention] = None
+        host_pages = (host_pool_tokens or 0) // page_size
         prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
             assert paged, "KV retention rides on the paged KV pool"
             assert cfg.prefix_cacheable, \
                 f"{cfg.name}: KV retention needs chunk-resumable prefill " \
                 "and purely attention-paged state (no recurrent carries)"
-            self.retention = KvRetention(page_size, session_ttl=session_ttl)
+            spill_sec = page_size * max(cfg.cache_bytes_per_token(), 1) \
+                / spill_bw
+            self.retention = KvRetention(
+                page_size, session_ttl=session_ttl,
+                host_pool_pages=host_pages,
+                spill_seconds_per_page=spill_sec)
+        else:
+            assert not host_pages, \
+                "the host spill tier rides on the retention layer"
 
         if paged:
             assert tfm.supports_paged_decode(cfg), \
@@ -138,14 +297,16 @@ class JaxEngineBackend:
                     f"full request of {self.pages_per_seq} pages + the "
                     f"trash page)")
             n_pages = max(n_pages, self.pages_per_seq)
-            self.alloc = paging.BlockAllocator(n_pages, page_size)
+            self.alloc = paging.BlockAllocator(n_pages, page_size,
+                                               host_pages=host_pages)
             self.trash_page = n_pages            # pool index n_pages
             self.pool_cache = tfm.init_paged_cache(
                 cfg, max_slots, self.cache_len, n_pages + 1, page_size)
-            self._bt_host = np.full((max_slots, self.pages_per_seq),
-                                    self.trash_page, np.int32)
-            self.pool_cache["block_tables"] = jnp.asarray(self._bt_host)
-            self._bt_dirty = False
+            self._bt = _BlockTableMirror(max_slots, self.pages_per_seq,
+                                         self.trash_page)
+            self.pool_cache["block_tables"] = jnp.asarray(self._bt.host)
+            if host_pages:
+                self.retention.copier = _EngineCopier(self, host_pages)
             self._decode_fn = jax.jit(
                 lambda p, t, c: tfm.decode_step(cfg, p, t, c,
                                                 moe_impl=moe_impl,
@@ -245,16 +406,17 @@ class JaxEngineBackend:
             slot = self._slot_of.pop(v.rid, None)
             if slot is not None:
                 self.slot_req[slot] = None
-                self._bt_host[slot] = self.trash_page
-                self._bt_dirty = True
+                self._bt.clear(slot, v.rid)
+            else:
+                self._bt.forget(v.rid)
             self.outputs[v.rid] = []         # regenerated after re-prefill
         for r in pool:                       # tables may have grown a page
             slot = self._slot_of.get(r.rid)
             if slot is not None:
-                t = np.asarray(self.alloc.table(r.rid), np.int32)
-                if not np.array_equal(self._bt_host[slot, :len(t)], t):
-                    self._bt_host[slot, :len(t)] = t
-                    self._bt_dirty = True
+                # incremental: only newly appended pages are written —
+                # the old full-table np.array_equal rescan paid
+                # O(pool x pages_per_seq) on EVERY dispatch
+                self._bt.sync(slot, r.rid, self.alloc)
         return victims
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
@@ -386,8 +548,7 @@ class JaxEngineBackend:
             firsts.append(tok)
             if self.paged:
                 t = self.alloc.table(r.rid)      # reserved at admission
-                self._bt_host[slot] = self.trash_page
-                self._bt_host[slot, :len(t)] = t
+                self._bt.insert(slot, r.rid, t)
                 tables.append(t)
                 # shared prefix pages already hold this KV — never
                 # re-scattered (they may be read by other live requests)
@@ -478,20 +639,20 @@ class JaxEngineBackend:
                         pool_slot, bc_slot))
             new_groups.append(tuple(slots_out))
         self.pool_cache = {"pos": pos,
-                           "block_tables": jnp.asarray(self._bt_host),
+                           "block_tables": jnp.asarray(self._bt.host),
                            "groups": tuple(new_groups)}
-        self._bt_dirty = False
+        self._bt.dirty = False
         self.next_tok = self.next_tok.at[sl].set(
             jnp.asarray(firsts, jnp.int32))
 
     def decode_iter(self, pool: Sequence[Request],
                     context_tokens: int) -> float:
-        if self.paged and self._bt_dirty:
+        if self.paged and self._bt.dirty:
             # tables changed (extend/preempt/release) — push the tiny
             # (slots, pages_per_seq) int32 host mirror; steady-state
             # decode iterations skip the transfer
-            self.pool_cache["block_tables"] = jnp.asarray(self._bt_host)
-            self._bt_dirty = False
+            self.pool_cache["block_tables"] = jnp.asarray(self._bt.host)
+            self._bt.dirty = False
         logits, self.pool_cache = self._decode_fn(
             self.params, self.next_tok, self.pool_cache)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -509,8 +670,9 @@ class JaxEngineBackend:
         if self.paged:
             self._release_pages(req)
             if slot is not None:
-                self._bt_host[slot] = self.trash_page
-                self._bt_dirty = True
+                self._bt.clear(slot, req.rid)
+            else:
+                self._bt.forget(req.rid)
 
     def _release_pages(self, req: Request) -> None:
         """End-of-life for a request's KV pages: one retention policy
@@ -537,8 +699,7 @@ class JaxEngineBackend:
         return np.asarray(self.outputs.get(req.rid, ()), np.int32)
 
     def maintain(self, now: float) -> None:
-        if self.retention is not None and self.paged:
-            self.retention.tick(self.alloc, now)
+        maintain_backend(self, now)
 
 
 class ServingEngine:
@@ -554,7 +715,9 @@ class ServingEngine:
                  page_size: int = 128,
                  kv_pool_tokens: Optional[int] = None,
                  prefix_cache: bool = False,
-                 session_ttl: Optional[float] = None):
+                 session_ttl: Optional[float] = None,
+                 host_pool_tokens: Optional[int] = None,
+                 spill_bw: float = 16e9):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -563,7 +726,8 @@ class ServingEngine:
             moe_impl=moe_impl, time_scale=time_scale,
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
             kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache,
-            session_ttl=session_ttl)
+            session_ttl=session_ttl, host_pool_tokens=host_pool_tokens,
+            spill_bw=spill_bw)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots))
         self.result: Optional[ServeResult] = None

@@ -25,6 +25,8 @@ class Snapshot:
     prefix_pages_saved: int = 0
     session_hits: int = 0
     session_hit_tokens: int = 0
+    spilled_pages: int = 0
+    restored_pages: int = 0
 
 
 class GlobalMonitor:
@@ -49,6 +51,10 @@ class GlobalMonitor:
         # resumed a retained conversation transcript
         self.session_hits = 0
         self.session_hit_tokens = 0
+        # host spill tier (core/retention.py, PR 5): pages moved over
+        # the host<->device channel instead of dropped/re-prefilled
+        self.spilled_pages = 0
+        self.restored_pages = 0
 
     # ------------------------------------------------------------ events --
     def on_arrival(self, t: float, seq_len: int) -> None:
@@ -85,6 +91,14 @@ class GlobalMonitor:
         self.session_hits += 1
         self.session_hit_tokens += hit_tokens
 
+    def on_spill_traffic(self, spilled: int, restored: int) -> None:
+        """Host-tier copy traffic since the last report: pages that
+        moved device->host (eviction demoted, not destroyed) and pages
+        that came back host->device (restored instead of
+        re-prefilled)."""
+        self.spilled_pages += spilled
+        self.restored_pages += restored
+
     # ------------------------------------------------------------- stats --
     def arrival_rate(self) -> float:
         if len(self.arrivals) < 2:
@@ -113,6 +127,7 @@ class GlobalMonitor:
                      self.in_flight_tokens, self.arrival_rate(),
                      self.mean_seq_len(), self.n_buckets, self.kv_util(),
                      self.prefix_hit_rate(), self.prefix_pages_saved,
-                     self.session_hits, self.session_hit_tokens)
+                     self.session_hits, self.session_hit_tokens,
+                     self.spilled_pages, self.restored_pages)
         self.history.append(s)
         return s

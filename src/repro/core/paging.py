@@ -20,9 +20,27 @@ and may additionally be pinned by the prefix cache itself.  A page
 returns to the free list only when its reference count hits zero, so
 releasing one sharer can never corrupt another's cache.
 
+Pages can SPILL to a host-RAM tier (PR 5): a page whose only reference
+is its retention pin may move device->host — the HBM page returns to
+the free list and a HOST SLOT records where the content went
+(``spill``); a later hit restores it through a reserved device page
+(``restore_begin``/``restore_commit``, split so the copy can complete
+asynchronously while the slot stays accounted).  The allocator is pure
+bookkeeping — actual byte movement is the execution backend's job
+(core/engine.py gathers/scatters real KV; the cost model only prices
+the transfer).
+
 Invariants (property-tested in tests/test_paging.py):
   * a page's refcount always equals (#live tables holding it) + (#pins);
-  * free + unique-live == total (no leaks, shared pages counted ONCE);
+  * free + unique-live + spilled-slots == accounted, i.e. device pages
+    still satisfy free + unique-live == n_pages (a spilled page's HBM
+    is genuinely freed) and host slots satisfy free-host + spilled ==
+    host_pages — no tier leaks, no double-assigned slot in either;
+  * a shared page NEVER spills (spill is refused unless the caller's
+    pin is the LAST reference);
+  * restore is idempotent: ``restore_begin`` on an already-restoring
+    slot returns the same reserved page; a second ``restore_commit``
+    is a no-op;
   * a live request's table holds exactly ``ceil(tokens / page_size)``
     pages;
   * alloc/extend are all-or-nothing; release is idempotent per rid.
@@ -49,14 +67,21 @@ class BlockAllocator:
     ``pin``/``unpin`` are the prefix cache's own references.
     """
 
-    def __init__(self, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int, host_pages: int = 0):
         assert n_pages > 0 and page_size > 0, (n_pages, page_size)
+        assert host_pages >= 0, host_pages
         self.n_pages = n_pages
         self.page_size = page_size
         # LIFO free list: released pages are reused first (locality)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._tables: Dict[int, List[int]] = {}
         self._refs: Dict[int, int] = {}          # page -> live refcount
+        self._pins: Dict[int, int] = {}          # page -> cache-pin count
+        # ---- host spill tier (0 host pages = disabled) ----
+        self.host_pages = host_pages
+        self._free_host: List[int] = list(range(host_pages - 1, -1, -1))
+        self._spilled: Dict[int, None] = {}      # hslot, content at rest
+        self._restoring: Dict[int, int] = {}     # hslot -> reserved page
 
     # ----------------------------------------------------------- queries --
     def pages_for(self, tokens: int) -> int:
@@ -86,8 +111,30 @@ class BlockAllocator:
     def table(self, rid: int) -> List[int]:
         return list(self._tables.get(rid, ()))
 
+    def table_len(self, rid: int) -> int:
+        """O(1) page count of ``rid``'s table (0 if not live) — lets the
+        engine's block-table mirror detect growth without copying the
+        whole table per dispatch."""
+        return len(self._tables.get(rid, ()))
+
+    def table_tail(self, rid: int, start: int) -> List[int]:
+        """Pages appended past index ``start`` — O(growth), the
+        incremental half of the mirror sync."""
+        return list(self._tables.get(rid, ())[start:])
+
     def holds(self, rid: int) -> bool:
         return rid in self._tables
+
+    # ----------------------------------------------------- host-tier state --
+    def spilled_slots(self) -> int:
+        """Host slots in use: content at rest + restores in flight."""
+        return len(self._spilled) + len(self._restoring)
+
+    def free_host_slots(self) -> int:
+        return len(self._free_host)
+
+    def is_spilled(self, hslot: int) -> bool:
+        return hslot in self._spilled or hslot in self._restoring
 
     # ------------------------------------------------------------- edits --
     def _pop_free(self) -> int:
@@ -162,12 +209,75 @@ class BlockAllocator:
         assert self._refs.get(page, 0) > 0, \
             f"pin target {page} is not live"
         self._refs[page] += 1
+        self._pins[page] = self._pins.get(page, 0) + 1
 
     def unpin(self, page: int) -> bool:
         """Drop a cache pin; True if the page was freed (no live table
         referenced it)."""
         assert self._refs.get(page, 0) > 0, f"unpin of dead page {page}"
+        assert self._pins.get(page, 0) > 0, f"unpin without pin: {page}"
+        if self._pins[page] == 1:
+            del self._pins[page]
+        else:
+            self._pins[page] -= 1
         return self._unref(page)
+
+    # ----------------------------------------------- host spill tier (§3) --
+    def spill(self, page: int) -> Optional[int]:
+        """Move ``page`` to the host tier: the caller's PIN must be the
+        LAST reference — a page referenced by any live block table (or
+        another pin) is refused, the sharer would read freed HBM.  On
+        success the device page returns to the free list and the
+        returned host slot records where the content went.  None when
+        refused or the host pool is full (state unchanged) — the
+        caller falls back to a destructive drop."""
+        if (self._refs.get(page, 0) != 1 or self._pins.get(page, 0) != 1
+                or not self._free_host):
+            return None
+        hslot = self._free_host.pop()
+        del self._pins[page]                 # the pin moves to the slot
+        freed = self._unref(page)
+        assert freed, "sole-reference page did not free on spill"
+        self._spilled[hslot] = None
+        return hslot
+
+    def restore_begin(self, hslot: int) -> Optional[int]:
+        """Reserve a device page for ``hslot``'s content to return to.
+        The page carries the caller's pin (refcount 1); the host slot
+        stays accounted until ``restore_commit`` — the copy may still
+        be reading it (double-buffer rule).  Idempotent: a slot already
+        restoring returns its reserved page.  None when no device page
+        is free (state unchanged; the caller evicts and retries)."""
+        if hslot in self._restoring:
+            return self._restoring[hslot]
+        assert hslot in self._spilled, f"restore of unspilled slot {hslot}"
+        if not self._free:
+            return None
+        page = self._pop_free()
+        self._pins[page] = 1                 # the slot's pin moves back
+        del self._spilled[hslot]
+        self._restoring[hslot] = page
+        return page
+
+    def restore_commit(self, hslot: int) -> bool:
+        """The copy landed: release the host slot.  Idempotent — a slot
+        not in flight is a no-op returning False."""
+        if hslot not in self._restoring:
+            return False
+        del self._restoring[hslot]
+        self._free_host.append(hslot)
+        return True
+
+    def drop_spilled(self, hslot: int) -> bool:
+        """Destroy spilled content (host-budget LRU, expiry of a demoted
+        session): the slot returns to the host free list.  A slot with a
+        restore in flight is refused — the copy is reading it."""
+        if hslot in self._restoring:
+            return False
+        assert hslot in self._spilled, f"drop of unspilled slot {hslot}"
+        del self._spilled[hslot]
+        self._free_host.append(hslot)
+        return True
 
 
 # ------------------------------------------------------- shared policies --
@@ -189,16 +299,28 @@ def admit_blocks(alloc: BlockAllocator, requests: Sequence,
     continues a retained transcript) are attached by REFERENCE
     (refcount++) and only the uncached suffix is charged to the free
     list.  On exhaustion the cache's ordered eviction policy (expired
-    sessions → LRU cold prefixes → live sessions) runs before giving
-    up — admission starvation reclaims retained cache before it
-    blocks.  ``note_admit`` commits a session claim on success;
-    ``abort`` rolls it back on failure."""
+    sessions → LRU cold prefixes → live sessions, each rung SPILLING
+    to host before it destroys when a spill tier is configured) runs
+    before giving up — admission starvation reclaims retained cache
+    before it blocks.  A request whose hit continues into spilled
+    pages is HELD (``Request.spill_wait`` set by the lookup): it is
+    not admitted this pass and the loop re-queues it for when the
+    restore lands.  ``note_admit`` commits a session claim on
+    success; ``abort`` rolls it back on failure."""
     n = 0
     for r in requests:
         shared: List[int] = []
         hit_tokens = 0
         if cache is not None:
-            shared, hit_tokens = cache.lookup(tokens_of(r), req=r)
+            shared, hit_tokens = cache.lookup(tokens_of(r), req=r,
+                                              alloc=alloc)
+            if getattr(r, "spill_wait", -1.0) >= 0.0:
+                # the hit continues into SPILLED pages and a host->device
+                # restore is in flight: HOLD the request (the loop parks
+                # it until spill_wait) instead of admitting it to
+                # re-prefill work whose KV is coming back over the bus
+                cache.abort(r)
+                break
         while True:
             got = alloc.alloc(r.rid, insert_tokens(r), shared=shared)
             if got is not None or cache is None:

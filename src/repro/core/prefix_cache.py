@@ -31,7 +31,7 @@ output logits — so the usable match is
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,9 +50,21 @@ class PrefixStats:
 
 class _Node:
     """One full-page chunk on a token path.  ``key`` is the raw bytes of
-    the page's token ids; ``page`` the physical page holding its KV."""
+    the page's token ids; ``page`` the physical page holding its KV.
 
-    __slots__ = ("key", "page", "children", "parent", "stamp")
+    Spill states (PR 5, host tier): LIVE (``hslot is None`` — ``page``
+    is a pinned device page), SPILLED (``hslot`` set, ``page`` == -1 —
+    content lives in host slot ``hslot``), RESTORING (``hslot`` set AND
+    ``page`` >= 0 — a host->device copy into the reserved ``page`` is
+    in flight, done at ``ready_at``).  The trie keeps spilled nodes so
+    lookups can find — and restore — a spilled continuation of a live
+    run.  Structural invariant: every ancestor of a LIVE or RESTORING
+    node is LIVE or RESTORING (spill moves leaf-inward, restore moves
+    root-outward), so a hit path is always a LIVE prefix followed by at
+    most one spilled/restoring run."""
+
+    __slots__ = ("key", "page", "children", "parent", "stamp", "hslot",
+                 "ready_at")
 
     def __init__(self, key: bytes, page: int, parent: "_Node"):
         self.key = key
@@ -60,6 +72,16 @@ class _Node:
         self.children: Dict[bytes, _Node] = {}
         self.parent = parent
         self.stamp = 0
+        self.hslot: Optional[int] = None
+        self.ready_at: float = -1.0
+
+    @property
+    def live(self) -> bool:
+        return self.hslot is None
+
+    @property
+    def restoring(self) -> bool:
+        return self.hslot is not None and self.page >= 0
 
 
 class PrefixCache:
@@ -80,6 +102,9 @@ class PrefixCache:
         self._nodes: Dict[_Node, None] = {}
         self._clock = 0
         self.stats = PrefixStats()
+        # host-drop hook (retention wires the backend copier + stats
+        # into it); None for a bare radix with no spill tier
+        self.on_host_drop = None
 
     # ----------------------------------------------------------- helpers --
     def _tick(self) -> int:
@@ -95,27 +120,48 @@ class PrefixCache:
         return len(self._nodes)
 
     def pinned_pages(self) -> List[int]:
-        return [n.page for n in self._nodes]
+        return [n.page for n in self._nodes if n.live]
+
+    def spilled_nodes(self) -> int:
+        return sum(1 for n in self._nodes if not n.live)
 
     # ------------------------------------------------------------ lookup --
-    def lookup(self, tokens, req=None) -> Tuple[List[int], int]:
+    def lookup(self, tokens, req=None, alloc=None) -> Tuple[List[int], int]:
         """Longest cached page run for ``tokens``, capped so at least
         one suffix token remains to prefill.  Returns (pages, tokens
-        matched); touches the path for LRU.  ``req`` is part of the
-        shared cache protocol (core/retention.py keys session state on
-        it) and is unused here."""
+        matched); touches the path for LRU.  ``req`` and ``alloc`` are
+        part of the shared cache protocol (core/retention.py keys
+        session state on the request and reserves restore pages from
+        the allocator) and are unused here."""
+        pages, _ = self.lookup_run(tokens)
+        return pages, len(pages) * self.page_size
+
+    def lookup_run(self, tokens) -> Tuple[List[int], List[_Node]]:
+        """The full cached walk for ``tokens``: the LIVE page run, plus
+        the SPILLED/RESTORING nodes that continue the same token path
+        (the structural invariant guarantees the walk is live-prefix
+        then spilled-suffix — a live node can never hide behind a
+        spilled one).  The retention layer turns the continuation into
+        a restore; a bare radix caller just takes the live run.
+        Touches the whole walked path for LRU (spilled nodes too: the
+        host-budget LRU ranks them by the same stamps)."""
         tokens = np.asarray(tokens)
         usable_cap = (len(tokens) - 1) // self.page_size
-        node, pages = self.root, []
+        node, pages, cont = self.root, [], []
         stamp = self._tick()
         for j in range(usable_cap):
             child = node.children.get(self._chunk(tokens, j))
             if child is None:
                 break
+            if child.live and cont:
+                break            # unreachable under the invariant
             child.stamp = stamp
-            pages.append(child.page)
+            if child.live:
+                pages.append(child.page)
+            else:
+                cont.append(child)
             node = child
-        return pages, len(pages) * self.page_size
+        return pages, cont
 
     # ---------------------------------------------------------- register --
     def register(self, alloc, tokens, table: List[int]) -> int:
@@ -123,6 +169,11 @@ class PrefixCache:
         the trie along the token path; chunks already present keep their
         canonical page (first-wins — a concurrent cold duplicate's page
         simply stays private); new chunks pin the request's own page.
+        A SPILLED chunk on the path is REVIVED for free: the releasing
+        request just recomputed the identical KV (page content is a
+        pure function of the token path), so the node adopts the fresh
+        device page and the host copy is discarded.  A RESTORING chunk
+        is left alone — its reserved page's copy is still in flight.
         Returns how many new pages were pinned."""
         tokens = np.asarray(tokens)
         n_full = len(tokens) // self.page_size
@@ -139,12 +190,42 @@ class PrefixCache:
                 self._nodes[child] = None
                 self.stats.inserted_pages += 1
                 added += 1
+            elif not child.live and not child.restoring:
+                # spilled: adopt the recomputed page, free the host slot
+                alloc.pin(table[j])
+                self._drop_host(alloc, child.hslot, revived=True)
+                child.page = table[j]
+                child.hslot = None
+                child.ready_at = -1.0
             child.stamp = stamp
             node = child
         return added
 
     # ---------------------------------------------------------- eviction --
+    def _drop_host(self, alloc, hslot: int, revived: bool = False) -> None:
+        """Discard one host slot's content; ``on_host_drop`` (wired by
+        the retention layer) forwards to the backend copier and the
+        spill-drop stats.  ``revived``: the content came back to device
+        by recompute, not destruction."""
+        ok = alloc.drop_spilled(hslot)
+        assert ok, f"host slot {hslot} had a restore in flight"
+        if self.on_host_drop is not None:
+            self.on_host_drop(hslot, revived)
+
+    def _drop_spilled_subtree(self, alloc, node: _Node) -> None:
+        """Remove a node's all-SPILLED subtree (no device pages — only
+        host slots return).  Descendants of a spilled node are spilled
+        by the structural invariant."""
+        for child in list(node.children.values()):
+            self._drop_spilled_subtree(alloc, child)
+            assert not child.live and not child.restoring, \
+                "live/restoring node below a drop point"
+            self._drop_host(alloc, child.hslot)
+            self._nodes.pop(child, None)
+        node.children.clear()
+
     def _evict_node(self, alloc, node: _Node) -> bool:
+        self._drop_spilled_subtree(alloc, node)
         freed = alloc.unpin(node.page)
         assert freed, "evictable leaf had refcount 1 but did not free"
         del node.parent.children[node.key]
@@ -153,13 +234,54 @@ class PrefixCache:
         return freed
 
     def _evictable(self, alloc, protect) -> List[_Node]:
-        """Evictable: a LEAF (an interior node is still an ancestor on
-        live paths) whose page has refcount exactly 1 (only our pin — no
-        live block table) and is not in ``protect`` (pages matched for
-        the admission in progress)."""
+        """Evictable (destructive drop): a LIVE node with refcount
+        exactly 1 (only our pin — no live block table), not in
+        ``protect`` (pages matched for the admission in progress), and
+        no LIVE or RESTORING child — an interior node on a live path is
+        still an ancestor the path needs, but a node whose children are
+        all SPILLED is the frontier (dropping it takes its dead spilled
+        subtree along)."""
         return [n for n in self._nodes
-                if not n.children and n.page not in protect
-                and alloc.refs(n.page) == 1]
+                if n.live and n.page not in protect
+                and alloc.refs(n.page) == 1
+                and all(not c.live and not c.restoring
+                        for c in n.children.values())]
+
+    # ------------------------------------------------- spill transitions --
+    def spill_candidates(self, alloc, protect) -> List[_Node]:
+        """Nodes that may move device->host, LRU first: the same
+        frontier rule as ``_evictable`` (spill is eviction minus the
+        data loss)."""
+        return sorted(self._evictable(alloc, set(protect)),
+                      key=lambda n: n.stamp)
+
+    def mark_spilled(self, node: _Node, hslot: int) -> None:
+        node.page = -1
+        node.hslot = hslot
+        node.ready_at = -1.0
+
+    def mark_restoring(self, node: _Node, page: int,
+                       ready_at: float) -> None:
+        node.page = page
+        node.ready_at = ready_at
+
+    def mark_live(self, node: _Node) -> None:
+        node.hslot = None
+        node.ready_at = -1.0
+
+    def lru_spilled_leaf(self) -> Optional[_Node]:
+        """LRU candidate for a host-budget drop: a SPILLED node with no
+        children at all (dropping an interior spilled node would orphan
+        its — equally spilled — descendants)."""
+        cands = [n for n in self._nodes
+                 if not n.live and not n.restoring and not n.children]
+        return min(cands, key=lambda n: n.stamp) if cands else None
+
+    def drop_spilled_node(self, alloc, node: _Node) -> None:
+        assert not node.live and not node.restoring and not node.children
+        self._drop_host(alloc, node.hslot)
+        del node.parent.children[node.key]
+        self._nodes.pop(node, None)
 
     def evict_one(self, alloc, protect=()) -> bool:
         """Evict the least-recently-used evictable leaf; True if a page
@@ -189,14 +311,22 @@ class PrefixCache:
         return freed
 
     def clear(self, alloc) -> int:
-        """Unpin everything (leaf-first).  Returns pages freed."""
+        """Unpin everything (leaf-first; spilled nodes give back host
+        slots, in-flight restores are committed first).  Returns device
+        pages freed."""
         freed = 0
         while self._nodes:
             progressed = False
             for n in list(self._nodes):
                 if n.children:
                     continue
-                freed += bool(alloc.unpin(n.page))
+                if n.restoring:
+                    alloc.restore_commit(n.hslot)
+                    freed += bool(alloc.unpin(n.page))
+                elif n.live:
+                    freed += bool(alloc.unpin(n.page))
+                else:
+                    self._drop_host(alloc, n.hslot)
                 del n.parent.children[n.key]
                 self._nodes.pop(n, None)
                 progressed = True

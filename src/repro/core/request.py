@@ -48,6 +48,12 @@ class Request:
     # transcript tokens restored from the SESSION table at the last
     # admission (includes the pinned partial tail; 0 = no session hit)
     session_hit_tokens: int = 0
+    # host-spill restore in flight (core/retention.py): the clock time
+    # when the pages this request's hit continues into finish their
+    # host->device copy.  >= 0 means HELD — the loop parks the request
+    # instead of admitting it to re-prefill restorable KV; reset to -1
+    # when it re-enters the queue.
+    spill_wait: float = -1.0
     # padded prompt tokens this request actually ran through the
     # prefill executor (accumulates across preemption restarts)
     prefilled_tokens: int = 0

@@ -258,6 +258,14 @@ class ServeResult:
     sessions_expired: int = 0            # TTL-tick unpins
     sessions_evicted: int = 0            # pressure unpins
     tail_pages_reused: int = 0           # pinned partial tails handed back
+    # ---- host spill tier accounting (core/retention.py, PR 5) ----
+    spilled_pages: int = 0               # device->host copies initiated
+    restored_pages: int = 0              # host->device copies completed
+    restored_tokens: int = 0             # KV tokens restored, not re-prefilled
+    spill_drops: int = 0                 # spilled entries destroyed
+    spill_hold_events: int = 0           # requests held on a restore
+    spill_time_total: float = 0.0        # priced device->host transfer s
+    restore_time_total: float = 0.0      # priced host->device transfer s
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -358,6 +366,10 @@ class ServingLoop:
         self._max_wall_s = max_wall_s
         self.pool: List[Request] = []
         self.pending_join: List[list] = []       # [ready_time, request]
+        # restore-in-flight requests, PARKED (not re-prefilled) until
+        # their host->device copy lands: [spill_wait, request]
+        self._held_restore: List[list] = []
+        self._spill_seen = (0, 0)                # (spilled, restored) fed
         self.job: Optional[PrefillJob] = None
         self.st = _LoopState(kv_budget=self.backend.kv_budget_tokens())
         self.backend.begin(requests)
@@ -385,7 +397,14 @@ class ServingLoop:
                          sessions_retained=rt.stats.sessions_retained,
                          sessions_expired=rt.stats.sessions_expired,
                          sessions_evicted=rt.stats.sessions_evicted,
-                         tail_pages_reused=rt.stats.tail_reuses)
+                         tail_pages_reused=rt.stats.tail_reuses,
+                         spilled_pages=rt.stats.pages_spilled,
+                         restored_pages=rt.stats.pages_restored,
+                         restored_tokens=rt.stats.restored_tokens,
+                         spill_drops=rt.stats.spill_drops,
+                         spill_hold_events=rt.stats.restore_holds,
+                         spill_time_total=rt.stats.spill_seconds,
+                         restore_time_total=rt.stats.restore_seconds)
         return ServeResult(
             requests=requests, makespan=self.backend.clock.now(),
             busy_prefill=st.busy_p, busy_decode=st.busy_d,
@@ -493,10 +512,32 @@ class ServingLoop:
                       key=lambda q: q.arrival)
 
     def _maintain(self, now: float) -> None:
-        """Backend housekeeping (session-TTL tick) once per iteration."""
+        """Backend housekeeping (session-TTL tick + spill/restore
+        completion polling) once per iteration; forwards spill traffic
+        deltas to the monitor."""
         m = getattr(self.backend, "maintain", None)
         if m is not None:
             m(now)
+        rt = getattr(self.backend, "retention", None)
+        mon = getattr(self.sched, "monitor", None)
+        if rt is not None and mon is not None:
+            sp, re = rt.stats.pages_spilled, rt.stats.pages_restored
+            if (sp, re) != self._spill_seen:
+                mon.on_spill_traffic(sp - self._spill_seen[0],
+                                     re - self._spill_seen[1])
+                self._spill_seen = (sp, re)
+
+    def _release_held(self, now: float) -> None:
+        """Re-queue parked requests whose restore landed — their next
+        admission finds the restored pages LIVE and resumes past them."""
+        for item in list(self._held_restore):
+            if item[0] <= now:
+                self._held_restore.remove(item)
+                r = item[1]
+                r.spill_wait = -1.0
+                # arrival stays untouched: the hold is queueing delay,
+                # so the restore latency lands on this request's TTFT
+                self.sched.on_arrival(r, now, requeue=True)
 
     def _form_batch(self, now: float, *,
                     count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
@@ -530,7 +571,13 @@ class ServingLoop:
         n_blk = self.backend.admit_blocks(batch.requests)
         if n_blk < batch.size:                       # KV-page clamp (paged)
             for r in batch.requests[n_blk:]:
-                self.sched.on_arrival(r, now, requeue=True)
+                if r.spill_wait >= 0.0:
+                    # hit continues into spilled pages: PARK until the
+                    # host->device restore lands — re-prefilling now
+                    # would throw away restorable KV
+                    self._held_restore.append([r.spill_wait, r])
+                else:
+                    self.sched.on_arrival(r, now, requeue=True)
             if n_blk == 0:
                 return None, False
             batch = FormedBatch(batch.requests[:n_blk], batch.pad_to,
@@ -608,6 +655,7 @@ class ServingLoop:
                 break
             now = clock.now()
             self._maintain(now)
+            self._release_held(now)
             self._admit_arrivals(now)
             self._process_joins(now)
 
@@ -640,13 +688,15 @@ class ServingLoop:
                           decode_free if self.pool else None,
                           self._next_arrival()]
                          + [it[0] for it in self.pending_join]
+                         + [it[0] for it in self._held_restore]
                          if c is not None and c > now]
                 if cands:
                     clock.advance(min(cands))
                 elif clock.virtual:
                     clock.advance(now + self.cfg.tick)
                 elif (not sched.queued() and not self.pool
-                      and not self.pending_join and self.job is None
+                      and not self.pending_join and not self._held_restore
+                      and self.job is None
                       and self._next_arrival() is None):
                     break                      # drained: nothing can progress
                 else:
@@ -729,6 +779,7 @@ class ServingLoop:
                 break
             now = clock.now()
             self._maintain(now)
+            self._release_held(now)
             self._admit_arrivals(now)
 
             batch = None
@@ -744,6 +795,7 @@ class ServingLoop:
                     self._run_batch_to_completion(batch, now)
                 else:
                     cands = [c for c in [self._next_arrival()]
+                             + [it[0] for it in self._held_restore]
                              if c is not None and c > now]
                     if sched.queued():
                         cands.append(now + self.cfg.tick)
@@ -753,6 +805,7 @@ class ServingLoop:
 
             if batch is None and not self.pool:
                 cands = [c for c in [self._next_arrival()]
+                         + [it[0] for it in self._held_restore]
                          if c is not None and c > now]
                 clock.advance(min(cands) if cands else now + self.cfg.tick)
                 continue

@@ -36,7 +36,7 @@ from . import paging
 from .batcher import FormedBatch
 from .prefix_cache import PrefixCache
 from .request import Request
-from .retention import KvRetention
+from .retention import KvRetention, maintain_backend
 from .serving_loop import (LoopConfig, PrefillJob, ServeResult, ServingLoop,
                            VirtualClock, batch_prefix_skip, plan_chunks)
 
@@ -159,13 +159,20 @@ class CostModelBackend:
                  kv_pool_tokens: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  prefix_cache: bool = False,
-                 session_ttl: Optional[float] = None):
+                 session_ttl: Optional[float] = None,
+                 host_pool_tokens: Optional[int] = None,
+                 spill_bw: float = 16e9):
         self.cost = cost
         self.clock = VirtualClock()
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.flops_per_token = 2.0 * cost.p_active
         self.session_ttl = session_ttl
+        # host spill tier: SAME per-page transfer pricing rule as the
+        # engine (page bytes over the host link), so spill decisions
+        # and hold times agree between the backends
+        self._host_pages = (host_pool_tokens or 0) // page_size
+        self._spill_sec = page_size * cost.kv_per_tok / spill_bw
         self.retention: Optional[KvRetention] = None
         prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
@@ -173,7 +180,13 @@ class CostModelBackend:
             assert cost.cfg.prefix_cacheable, \
                 f"{cost.cfg.name}: KV retention needs chunk-resumable " \
                 "prefill and purely attention-paged state"
-            self.retention = KvRetention(page_size, session_ttl=session_ttl)
+            self.retention = KvRetention(
+                page_size, session_ttl=session_ttl,
+                host_pool_pages=self._host_pages,
+                spill_seconds_per_page=self._spill_sec)
+        else:
+            assert not self._host_pages, \
+                "the host spill tier rides on the retention layer"
         if paged:
             # block accounting REPLACES the token-budget OOM check
             self._kv_budget = math.inf
@@ -194,7 +207,8 @@ class CostModelBackend:
                     f"{(min_pages + 1) * page_size} tokens (one full "
                     f"request of {min_pages} pages + the trash page)")
             self.alloc = paging.BlockAllocator(max(n_pages, min_pages),
-                                               page_size)
+                                               page_size,
+                                               host_pages=self._host_pages)
         else:
             self._kv_budget = kv_budget
 
@@ -208,10 +222,13 @@ class CostModelBackend:
         self.clock = VirtualClock()
         if self.paged:
             self.alloc = paging.BlockAllocator(self.alloc.n_pages,
-                                               self.page_size)
+                                               self.page_size,
+                                               host_pages=self._host_pages)
         if self.retention is not None:
-            self.retention = KvRetention(self.page_size,
-                                         session_ttl=self.session_ttl)
+            self.retention = KvRetention(
+                self.page_size, session_ttl=self.session_ttl,
+                host_pool_pages=self._host_pages,
+                spill_seconds_per_page=self._spill_sec)
             # the radix index keys on ACTUAL token ids: materialize them
             # through the one shared rule (Request.materialize_tokens —
             # which leaves later session turns for the loop to compose)
@@ -223,8 +240,7 @@ class CostModelBackend:
         return self._kv_budget
 
     def maintain(self, now: float) -> None:
-        if self.retention is not None and self.paged:
-            self.retention.tick(self.alloc, now)
+        maintain_backend(self, now)
 
     def free_slots(self) -> int:          # pragma: no cover - not consulted
         return 1 << 30
@@ -344,7 +360,9 @@ class Simulator:
                  kv_pool_tokens: Optional[int] = None,
                  cache_len: Optional[int] = None,
                  prefix_cache: bool = False,
-                 session_ttl: Optional[float] = None):
+                 session_ttl: Optional[float] = None,
+                 host_pool_tokens: Optional[int] = None,
+                 spill_bw: float = 16e9):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
@@ -368,7 +386,8 @@ class Simulator:
             cost, kv_budget=cost.kv_budget_tokens(chips),
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
             kv_pool_tokens=kv_pool_tokens, cache_len=cache_len,
-            prefix_cache=prefix_cache, session_ttl=session_ttl)
+            prefix_cache=prefix_cache, session_ttl=session_ttl,
+            host_pool_tokens=host_pool_tokens, spill_bw=spill_bw)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick))

@@ -65,7 +65,9 @@ def _run_sim(cfg, args, reqs):
                     paged=args.paged, page_size=args.page_size,
                     kv_pool_tokens=args.pool_tokens,
                     prefix_cache=args.prefix_cache,
-                    session_ttl=args.session_ttl if args.sessions else None)
+                    session_ttl=args.session_ttl if args.sessions else None,
+                    host_pool_tokens=args.host_pool_tokens,
+                    spill_bw=args.spill_bw * 1e9)
     res = sim.run(reqs)
     prefix_info = ""
     if args.prefix_cache:
@@ -79,6 +81,12 @@ def _run_sim(cfg, args, reqs):
             f"{res.session_hit_tokens} transcript tokens restored, "
             f"{res.tail_pages_reused} tails reused, "
             f"{res.sessions_expired} expired; ")
+    if args.kv_spill:
+        prefix_info += (
+            f"spill: {res.spilled_pages} pages out, "
+            f"{res.restored_pages} back ({res.restored_tokens} tokens), "
+            f"{res.spill_drops} dropped, "
+            f"{res.spill_hold_events} holds; ")
     print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
           f"{res.makespan:.2f} virtual s; {res.throughput_tok_s():.0f} tok/s; "
           f"SLO {res.slo_attainment():.2f}; OOM {res.oom_events}; "
@@ -121,6 +129,18 @@ def main():
     ap.add_argument("--session-ttl", type=float, default=60.0,
                     help="seconds a finished conversation's KV stays "
                          "pinned awaiting the next turn")
+    ap.add_argument("--kv-spill", action="store_true",
+                    help="host-RAM spill tier under the retention layer "
+                         "(core/retention.py): pressure/TTL eviction "
+                         "copies cold retained pages device->host and a "
+                         "later hit restores them instead of "
+                         "re-prefilling (implies --prefix-cache)")
+    ap.add_argument("--host-pool-tokens", type=int, default=None,
+                    help="host-RAM spill budget in KV tokens (default: "
+                         "4x the device pool)")
+    ap.add_argument("--spill-bw", type=float, default=16.0,
+                    help="host<->device link bandwidth in GB/s used to "
+                         "price spill/restore transfers")
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="total pooled KV tokens (default: slots x "
                          "cache_len — the contiguous pool's budget — on "
@@ -135,13 +155,22 @@ def main():
     ap.add_argument("--trigger", default="waste",
                     choices=["majority", "waste"])
     args = ap.parse_args()
-    args.prefix_cache = args.prefix_cache or args.sessions > 0
+    # an explicit host budget means the user wants the tier on — don't
+    # silently discard their sizing because --kv-spill was omitted
+    args.kv_spill = args.kv_spill or args.host_pool_tokens is not None
+    args.prefix_cache = (args.prefix_cache or args.sessions > 0
+                         or args.kv_spill)
     args.paged = args.paged or args.prefix_cache
 
     if args.smoke:
         cfg = get_smoke_config(args.arch, max_seq_len=256)
     else:
         cfg = get_config(args.arch)
+    if args.kv_spill and args.host_pool_tokens is None:
+        args.host_pool_tokens = 4 * (args.pool_tokens
+                                     or args.slots * cfg.max_seq_len)
+    if not args.kv_spill:
+        args.host_pool_tokens = None
     if not cfg.has_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; serve prefill-only "
                          "workloads via max_new_tokens=1")
@@ -196,7 +225,9 @@ def main():
                            kv_pool_tokens=args.pool_tokens,
                            prefix_cache=args.prefix_cache,
                            session_ttl=args.session_ttl if args.sessions
-                           else None)
+                           else None,
+                           host_pool_tokens=args.host_pool_tokens,
+                           spill_bw=args.spill_bw * 1e9)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -224,6 +255,13 @@ def main():
                 f"{r.session_hit_tokens} transcript tokens restored, "
                 f"{r.tail_pages_reused} tails reused, "
                 f"{r.sessions_retained} retained; ")
+        if args.kv_spill:
+            r = engine.result
+            paged_info += (
+                f"spill: {r.spilled_pages} pages out, "
+                f"{r.restored_pages} back ({r.restored_tokens} tokens), "
+                f"{r.spill_drops} dropped, "
+                f"{r.spill_hold_events} holds; ")
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "
           f"{dt:.1f}s; prefill shapes: {engine.n_prefill_shapes}; "
           f"decode steps interleaved between prefill chunks: "

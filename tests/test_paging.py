@@ -2,11 +2,18 @@
 property tests) and the shared admission/extension/preemption policies
 both execution backends drive (core/paging.py, DESIGN.md §3).
 
-Invariants (generalized for refcounted prefix sharing, PR 3):
+Invariants (generalized for refcounted prefix sharing, PR 3, and the
+host spill tier, PR 5):
   * a page's refcount always equals (#live tables holding it) + (#pins)
     — no page is freed while referenced;
-  * free + unique-live == total (no leaks, shared pages counted ONCE),
-    across any alloc/share/extend/pin/unpin/release interleaving;
+  * free + unique-live + spilled == total: device pages satisfy
+    free + unique-live == n_pages (a spilled page's HBM genuinely
+    frees) and host slots satisfy free-host + spilled == host_pages,
+    across any alloc/share/extend/pin/unpin/release/spill/restore
+    interleaving;
+  * a SHARED page never spills (refused unless the caller's pin is the
+    last reference); restore is idempotent (begin returns the same
+    reserved page, a second commit is a no-op);
   * a live request's table covers exactly ceil(tokens / page_size)
     pages;
   * alloc/extend are all-or-nothing (failed calls change nothing);
@@ -302,3 +309,126 @@ if HAVE_HYPOTHESIS:
                 # tables still cover their spans exactly
                 for rid2, t in tables.items():
                     assert a.table(rid2) == t
+
+
+if HAVE_HYPOTHESIS:
+    spill_ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("alloc"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            st.tuples(st.just("salloc"), st.integers(0, 7),
+                      st.integers(1, 200), st.integers(0, 7)),
+            st.tuples(st.just("extend"), st.integers(0, 7),
+                      st.integers(1, 200)),
+            st.tuples(st.just("release"), st.integers(0, 7)),
+            st.tuples(st.just("pin"), st.integers(0, 7)),
+            st.tuples(st.just("unpin"), st.integers(0, 30)),
+            # host tier transitions (PR 5)
+            st.tuples(st.just("spill"), st.integers(0, 30)),
+            st.tuples(st.just("spill_shared"), st.integers(0, 7)),
+            st.tuples(st.just("rbegin"), st.integers(0, 30)),
+            st.tuples(st.just("rcommit"), st.integers(0, 30)),
+            st.tuples(st.just("rdrop"), st.integers(0, 30)),
+        ),
+        min_size=1, max_size=100)
+
+    class TestSpillRestoreProperties:
+        """Satellite (PR 5): spill -> release -> restore -> pin
+        orderings hold the extended invariants — a shared radix page's
+        spill is refused while referenced, restore is idempotent, and
+        free + unique-live + spilled == total across both tiers.  A
+        host-side mirror (pins / spilled slots / restores in flight) is
+        maintained independently and compared every step."""
+
+        @settings(deadline=None, max_examples=200)
+        @given(ops=spill_ops, n_pages=st.integers(2, 12),
+               host_pages=st.integers(0, 6),
+               page=st.sampled_from([1, 8, 128]))
+        def test_spill_restore_interleavings_hold_invariants(
+                self, ops, n_pages, host_pages, page):
+            a = BlockAllocator(n_pages, page, host_pages=host_pages)
+            tables = {}                  # rid -> expected table
+            pins = []                    # caller-held page pins (dups ok)
+            spilled = []                 # caller-owned host slots at rest
+            restoring = {}               # hslot -> reserved device page
+            for op in ops:
+                kind = op[0]
+                if kind == "alloc" and not a.holds(op[1]):
+                    t = a.alloc(op[1], op[2])
+                    if t is not None:
+                        tables[op[1]] = t
+                elif kind == "salloc" and not a.holds(op[1]):
+                    donor = tables.get(op[3])
+                    shared = (donor or [])[:a.pages_for(op[2])]
+                    t = a.alloc(op[1], op[2], shared=shared)
+                    if t is not None:
+                        tables[op[1]] = t
+                elif kind == "extend" and a.holds(op[1]):
+                    new = a.extend(op[1], op[2])
+                    if new is not None:
+                        tables[op[1]].extend(new)
+                elif kind == "release":
+                    a.release(op[1])
+                    tables.pop(op[1], None)
+                elif kind == "pin" and a.holds(op[1]) and a.table(op[1]):
+                    p = a.table(op[1])[0]
+                    a.pin(p)
+                    pins.append(p)
+                elif kind == "unpin" and pins:
+                    a.unpin(pins.pop(op[1] % len(pins)))
+                elif kind == "spill" and pins:
+                    p = pins[op[1] % len(pins)]
+                    h = a.spill(p)
+                    in_table = any(p in t for t in tables.values())
+                    if h is not None:
+                        # only a sole-pin page with no table sharer spills
+                        assert not in_table and pins.count(p) == 1
+                        pins.remove(p)       # pin moved to the host slot
+                        assert h not in spilled and h not in restoring
+                        spilled.append(h)
+                    else:
+                        assert (in_table or pins.count(p) > 1
+                                or not a.free_host_slots())
+                elif kind == "spill_shared" and a.holds(op[1]):
+                    # a page in a live table must NEVER spill
+                    p = a.table(op[1])[0]
+                    before = a.refs(p)
+                    assert a.spill(p) is None
+                    assert a.refs(p) == before
+                elif kind == "rbegin" and spilled:
+                    h = spilled[op[1] % len(spilled)]
+                    pg = a.restore_begin(h)
+                    if pg is not None:
+                        assert a.restore_begin(h) == pg   # idempotent
+                        spilled.remove(h)
+                        restoring[h] = pg
+                elif kind == "rcommit" and restoring:
+                    h = list(restoring)[op[1] % len(restoring)]
+                    pg = restoring.pop(h)
+                    assert a.restore_commit(h) is True
+                    assert a.restore_commit(h) is False   # idempotent
+                    pins.append(pg)          # reserved page is ours now
+                elif kind == "rdrop" and spilled:
+                    h = spilled[op[1] % len(spilled)]
+                    assert a.drop_spilled(h) is True
+                    spilled.remove(h)
+
+                # refcount == tables + pins + restore reservations
+                expect = {}
+                for t in tables.values():
+                    for p in t:
+                        expect[p] = expect.get(p, 0) + 1
+                for p in pins:
+                    expect[p] = expect.get(p, 0) + 1
+                for p in restoring.values():
+                    expect[p] = expect.get(p, 0) + 1
+                for p in range(n_pages):
+                    assert a.refs(p) == expect.get(p, 0)
+                # two-tier accounting: no leaks on either side
+                assert a.free_pages() + a.live_pages() == n_pages
+                assert a.free_host_slots() + a.spilled_slots() \
+                    == host_pages
+                assert a.spilled_slots() == len(spilled) + len(restoring)
+                # no host slot double-assigned
+                assert len(set(spilled) | set(restoring)) \
+                    == len(spilled) + len(restoring)
