@@ -91,6 +91,27 @@ class DynamicBatchController:
         cap = self.token_budget(in_flight_tokens) * (1 - self.decode_reserve)
         return max(1, min(self.max_batch, int(cap / max(mean_len, 1.0))))
 
+    def admission_pressure_tokens(self, restore_pages: int,
+                                  restore_backlog_bytes: int) -> int:
+        """Restore-aware admission pricing (DESIGN.md §4): Eq.-(6)
+        token-equivalents of host-tier restore traffic the plain
+        in-flight sum misses.
+
+        Two terms: (1) device pages already RESERVED by in-flight
+        restores (``restore_begin`` took them off the free list, but no
+        block table holds them yet) — real KV occupancy under paged
+        accounting; (2) the COMPRESSED bytes still queued on the PCIe
+        channel, converted through Eq. (6)'s own denominator
+        (``kv_per_tok``) — restores about to land and occupy pages get
+        priced before admission overfills the pool and forces the
+        evict/restore thrash the reservations exist to prevent.  A
+        compressed spill tier (int8/int4) queues fewer bytes per page,
+        so its backlog term is proportionally cheaper — quantized spill
+        shows up in admission exactly as it does on the wire."""
+        pages = restore_pages * self.page_size \
+            if self.memory_model == "paged" else 0
+        return pages + int(restore_backlog_bytes / self.kv_per_tok)
+
     def _cache_len(self, r: Request) -> int:
         win = self.cfg.sliding_window or (
             self.cfg.local_window if self.cfg.arch_type == "hybrid" else 0)

@@ -84,6 +84,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tfm
+from repro.models.attention import dequantize_kv_int4, quantize_kv_int4
 from repro.models.config import BLOCK_ATTN, BLOCK_MOE, ModelConfig
 from . import paging
 from .batcher import FormedBatch
@@ -159,12 +160,31 @@ class _EngineCopier:
     back into the reserved pool page at initiation (a functional
     ``.at[].set`` — by the time the held request prefills, the gather
     in ``_seed_prefix`` reads values bit-identical to the ones
-    spilled)."""
+    spilled).
 
-    def __init__(self, backend: "JaxEngineBackend", host_pages: int):
+    Quantized spill (``spill_dtype``, DESIGN.md §3 "Tier precision"):
+    the device->host materialization COMPRESSES the K/V payload leaves
+    ("k"/"v") to the spill dtype — int8 (one scale per token-head row,
+    same rule as ``attention.quantize_kv``) or int4 (two values packed
+    per byte, ``attention.quantize_kv_int4``) — with the f32 per-page
+    scale planes stored alongside the slot; the restore path
+    dequantizes back to the pool leaf's dtype.  Two lossless special
+    cases anchor the bit-accuracy story: bf16 spill is a raw
+    pass-through of every leaf (pre-quantization behavior), and an
+    int8 HOT pool's already-int8 leaves pass through an int8 spill
+    tier untouched (re-quantizing integer codes would NOT round-trip).
+    The pool's own "k_s"/"v_s" scale planes are always raw — they ARE
+    the precision bookkeeping."""
+
+    _Q_KEYS = ("k", "v")                    # payload leaves; scales raw
+
+    def __init__(self, backend: "JaxEngineBackend", host_pages: int,
+                 spill_dtype: str = ""):
         self.be = backend
         self.host_pages = host_pages
+        self.spill_dtype = spill_dtype
         self._host: Dict[tuple, np.ndarray] = {}
+        self._scales: Dict[tuple, np.ndarray] = {}  # compressed leaves only
         self._staged: Dict[int, list] = {}      # hslot -> [(leafkey, slice)]
         self._pending: List[Tuple[int, int]] = []   # (hslot, dest page)
 
@@ -184,6 +204,56 @@ class _EngineCopier:
             self._host[lk] = h
         return h
 
+    def _scale_leaf(self, lk: tuple, like) -> np.ndarray:
+        s = self._scales.get(lk)
+        if s is None:
+            s = np.zeros((like.shape[0], self.host_pages) + like.shape[1:],
+                         np.float32)
+            self._scales[lk] = s
+        return s
+
+    def _quantizes(self, lk: tuple, dtype) -> bool:
+        """Does this leaf compress on spill?  Deterministic per leaf for
+        the whole run — the restore path keys off the same rule."""
+        if self.spill_dtype in ("", "bf16") or lk[2] not in self._Q_KEYS:
+            return False
+        if self.spill_dtype == "int8" and dtype == np.int8:
+            return False                    # int8 pool: lossless pass-through
+        return True
+
+    def _materialize(self, hslot: int, lk: tuple, sl) -> None:
+        arr = np.asarray(sl)
+        if not self._quantizes(lk, arr.dtype):
+            self._host_leaf(lk, arr)[:, hslot] = arr
+            return
+        x = arr.astype(np.float32)
+        if self.spill_dtype == "int4":
+            payload, scale = quantize_kv_int4(x)
+        else:                               # int8 spill of a float pool
+            scale = np.maximum(np.abs(x).max(axis=-1) / 127.0,
+                               1e-8).astype(np.float32)
+            payload = np.clip(np.rint(x / scale[..., None]),
+                              -127, 127).astype(np.int8)
+        self._host_leaf(lk, payload)[:, hslot] = payload
+        self._scale_leaf(lk, scale)[:, hslot] = scale
+
+    def _decompress(self, lk: tuple, src: np.ndarray, hslots: List[int],
+                    leaf) -> np.ndarray:
+        """Invert ``_materialize`` for a batch of host slots; the
+        target is the pool leaf's own dtype (int4->int8 re-expands the
+        integer codes, everything else lands on the float cache
+        dtype)."""
+        if lk not in self._scales:
+            return src                      # raw pass-through leaf
+        scale = self._scales[lk][:, hslots]
+        if self.spill_dtype == "int4":
+            x = dequantize_kv_int4(src, scale, leaf.shape[-1])
+        else:
+            x = src.astype(np.float32) * scale[..., None]
+        if leaf.dtype == np.int8:
+            return np.clip(np.rint(x), -127, 127).astype(np.int8)
+        return x.astype(leaf.dtype)
+
     def spill(self, page: int, hslot: int) -> None:
         self._staged[hslot] = [(lk, leaf[:, page])
                                for lk, leaf in self._attn_leaves()]
@@ -199,7 +269,7 @@ class _EngineCopier:
         always lands before the held request's prefill gathers it."""
         for hslot, slices in self._staged.items():
             for lk, sl in slices:
-                self._host_leaf(lk, sl)[:, hslot] = np.asarray(sl)
+                self._materialize(hslot, lk, sl)
         self._staged.clear()
         if not self._pending:
             return
@@ -215,7 +285,9 @@ class _EngineCopier:
                 if btype in (BLOCK_ATTN, BLOCK_MOE):
                     out = {}
                     for k, leaf in slot.items():
-                        src = self._host[(gi, j, k)][:, hslots]
+                        lk = (gi, j, k)
+                        src = self._decompress(lk, self._host[lk][:, hslots],
+                                               hslots, leaf)
                         out[k] = leaf.at[:, dst].set(jnp.asarray(src))
                     slots_out.append(out)
                 else:
@@ -244,7 +316,8 @@ class JaxEngineBackend:
                  prefix_cache: bool = False,
                  session_ttl: Optional[float] = None,
                  host_pool_tokens: Optional[int] = None,
-                 spill_bw: float = 16e9):
+                 spill_bw: float = 16e9,
+                 spill_dtype: str = ""):
         self.cfg = cfg
         self.params = params
         self.max_slots = max_slots
@@ -255,25 +328,29 @@ class JaxEngineBackend:
         self.supports_decode = cfg.has_decode
         self.flops_per_token = 2.0 * cfg.active_param_count()
         self.paged = paged
+        self.spill_dtype = spill_dtype
         # retention layer (core/retention.py): the radix prefix index
         # plus, when session_ttl is set, TTL'd multi-turn session
         # retention of finished transcripts; host_pool_tokens adds the
-        # host-RAM spill tier beneath it (same transfer pricing rule as
-        # the cost model: page bytes over the host link)
+        # host-RAM spill tier beneath it.  Both the host-slot count and
+        # the per-page transfer price are denominated in COMPRESSED
+        # bytes (spill_dtype), through the same paging.host_tier_geometry
+        # rule the cost model uses — so an int4 spill tier retains more
+        # pages AND restores each one faster under the same budget
         self.retention: Optional[KvRetention] = None
-        host_pages = (host_pool_tokens or 0) // page_size
+        host_pages, slot_bytes = paging.host_tier_geometry(
+            cfg, host_pool_tokens, page_size, spill_dtype)
         prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
             assert paged, "KV retention rides on the paged KV pool"
             assert cfg.prefix_cacheable, \
                 f"{cfg.name}: KV retention needs chunk-resumable prefill " \
                 "and purely attention-paged state (no recurrent carries)"
-            spill_sec = page_size * max(cfg.cache_bytes_per_token(), 1) \
-                / spill_bw
             self.retention = KvRetention(
                 page_size, session_ttl=session_ttl,
                 host_pool_pages=host_pages,
-                spill_seconds_per_page=spill_sec)
+                spill_seconds_per_page=slot_bytes / spill_bw,
+                spill_page_bytes=slot_bytes)
         else:
             assert not host_pages, \
                 "the host spill tier rides on the retention layer"
@@ -285,10 +362,12 @@ class JaxEngineBackend:
             self.page_size = page_size
             self.s_attn = S
             self.pages_per_seq = -(-S // page_size)
-            # same HBM budget as a contiguous pool of max_slots by
-            # default; the trash page comes OUT of the budget
+            # same HBM BYTE budget as a contiguous bf16 pool of
+            # max_slots by default, re-denominated at the pool's actual
+            # cache dtype (an int8 pool holds ~2x the pages); the trash
+            # page comes OUT of the budget
             total = kv_pool_tokens or max_slots * S
-            n_pages = total // page_size - 1
+            n_pages = paging.device_pool_pages(cfg, total, page_size) - 1
             if kv_pool_tokens is not None and n_pages < self.pages_per_seq:
                 raise ValueError(
                     f"kv_pool_tokens={kv_pool_tokens} too small: the "
@@ -297,8 +376,10 @@ class JaxEngineBackend:
                     f"full request of {self.pages_per_seq} pages + the "
                     f"trash page)")
             n_pages = max(n_pages, self.pages_per_seq)
-            self.alloc = paging.BlockAllocator(n_pages, page_size,
-                                               host_pages=host_pages)
+            self.alloc = paging.BlockAllocator(
+                n_pages, page_size, host_pages=host_pages,
+                page_bytes=page_size * max(cfg.cache_bytes_per_token(), 1),
+                host_slot_bytes=slot_bytes)
             self.trash_page = n_pages            # pool index n_pages
             self.pool_cache = tfm.init_paged_cache(
                 cfg, max_slots, self.cache_len, n_pages + 1, page_size)
@@ -306,7 +387,8 @@ class JaxEngineBackend:
                                          self.trash_page)
             self.pool_cache["block_tables"] = jnp.asarray(self._bt.host)
             if host_pages:
-                self.retention.copier = _EngineCopier(self, host_pages)
+                self.retention.copier = _EngineCopier(self, host_pages,
+                                                      spill_dtype)
             self._decode_fn = jax.jit(
                 lambda p, t, c: tfm.decode_step(cfg, p, t, c,
                                                 moe_impl=moe_impl,
@@ -717,7 +799,8 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  session_ttl: Optional[float] = None,
                  host_pool_tokens: Optional[int] = None,
-                 spill_bw: float = 16e9):
+                 spill_bw: float = 16e9,
+                 spill_dtype: str = ""):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -727,7 +810,7 @@ class ServingEngine:
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
             kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache,
             session_ttl=session_ttl, host_pool_tokens=host_pool_tokens,
-            spill_bw=spill_bw)
+            spill_bw=spill_bw, spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots))
         self.result: Optional[ServeResult] = None

@@ -55,6 +55,13 @@ class GlobalMonitor:
         # the host<->device channel instead of dropped/re-prefilled
         self.spilled_pages = 0
         self.restored_pages = 0
+        # restore-aware admission pricing: the CURRENT in-flight
+        # restore state (pages reserved on device, compressed bytes
+        # still queued on the channel) — levels, not counters; the
+        # loop's maintain step overwrites them each iteration and the
+        # batch controller folds them into Eq. (6)
+        self.restore_pages_in_flight = 0
+        self.restore_backlog_bytes = 0
 
     # ------------------------------------------------------------ events --
     def on_arrival(self, t: float, seq_len: int) -> None:
@@ -98,6 +105,15 @@ class GlobalMonitor:
         re-prefilled)."""
         self.spilled_pages += spilled
         self.restored_pages += restored
+
+    def on_restore_state(self, pages_in_flight: int,
+                         backlog_bytes: int) -> None:
+        """Overwrite the in-flight restore LEVEL (not a delta): device
+        pages reserved by restores plus compressed bytes queued on the
+        host channel, read off the retention layer each maintain
+        tick."""
+        self.restore_pages_in_flight = pages_in_flight
+        self.restore_backlog_bytes = backlog_bytes
 
     # ------------------------------------------------------------- stats --
     def arrival_rate(self) -> float:

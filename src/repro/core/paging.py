@@ -67,11 +67,18 @@ class BlockAllocator:
     ``pin``/``unpin`` are the prefix cache's own references.
     """
 
-    def __init__(self, n_pages: int, page_size: int, host_pages: int = 0):
+    def __init__(self, n_pages: int, page_size: int, host_pages: int = 0,
+                 page_bytes: int = 0, host_slot_bytes: int = 0):
         assert n_pages > 0 and page_size > 0, (n_pages, page_size)
         assert host_pages >= 0, host_pages
         self.n_pages = n_pages
         self.page_size = page_size
+        # byte denomination of each tier (0 = caller doesn't track
+        # bytes): a device page holds page_size tokens at the HOT
+        # cache width; a host slot holds the same tokens at the SPILL
+        # width — the tiers may differ (DESIGN.md §3 "Tier precision")
+        self.page_bytes = page_bytes
+        self.host_slot_bytes = host_slot_bytes
         # LIFO free list: released pages are reused first (locality)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._tables: Dict[int, List[int]] = {}
@@ -135,6 +142,15 @@ class BlockAllocator:
 
     def is_spilled(self, hslot: int) -> bool:
         return hslot in self._spilled or hslot in self._restoring
+
+    def device_bytes_in_use(self) -> int:
+        """HBM bytes the live pages pin (hot-tier width)."""
+        return self.live_pages() * self.page_bytes
+
+    def host_bytes_in_use(self) -> int:
+        """Host-RAM bytes the spilled slots pin (spill-tier width —
+        compressed when the spill dtype is narrower than the pool)."""
+        return self.spilled_slots() * self.host_slot_bytes
 
     # ------------------------------------------------------------- edits --
     def _pop_free(self) -> int:
@@ -278,6 +294,40 @@ class BlockAllocator:
         del self._spilled[hslot]
         self._free_host.append(hslot)
         return True
+
+
+# ------------------------------------------------- tier byte denomination --
+def device_pool_pages(cfg, pool_tokens: int, page_size: int) -> int:
+    """Device pages a hot-pool budget of ``pool_tokens`` REFERENCE
+    (bf16-width) KV tokens buys at the pool's actual cache dtype.
+
+    The budget is a byte quantity expressed in bf16-token units —
+    ``pool_tokens × kv_bytes_per_token(2)`` bytes of HBM — and each
+    page costs ``page_size × cache_bytes_per_token()`` of it, so an
+    int8 pool genuinely holds ~2× the pages of a bf16 pool under the
+    SAME budget instead of only shifting the Eq.-(6) token cap.  For a
+    bf16 pool this reduces exactly to ``pool_tokens // page_size``
+    (the pre-quantized-tiers rule).  THE one sizing rule both
+    execution backends share (backend parity)."""
+    pool_bytes = max(pool_tokens, 0) * cfg.kv_bytes_per_token(2)
+    page_cost = page_size * max(cfg.cache_bytes_per_token(), 1)
+    return pool_bytes // page_cost
+
+
+def host_tier_geometry(cfg, host_pool_tokens: Optional[int],
+                       page_size: int, spill_dtype: str = ""):
+    """(host_slots, bytes_per_slot) of the host spill tier for a budget
+    of ``host_pool_tokens`` reference (bf16-width) KV tokens.
+
+    A slot stores one page at the SPILL dtype's width
+    (``cfg.spill_bytes_per_token``), so the same host budget retains
+    ~2× (int8) / ~3.5× (int4) more transcript pages than a bf16 spill
+    — and ``bytes_per_slot`` is what one page transfer moves over the
+    PCIe link, which both backends price identically
+    (``bytes_per_slot / spill_bw`` seconds per page)."""
+    slot_bytes = page_size * max(cfg.spill_bytes_per_token(spill_dtype), 1)
+    budget_bytes = (host_pool_tokens or 0) * cfg.kv_bytes_per_token(2)
+    return budget_bytes // slot_bytes, slot_bytes
 
 
 # ------------------------------------------------------- shared policies --

@@ -89,6 +89,9 @@ class RetentionStats:
     restore_holds: int = 0       # restore runs that held a request on TTFT
     spill_seconds: float = 0.0   # priced device->host transfer time
     restore_seconds: float = 0.0  # priced host->device transfer time
+    # ---- quantized spill tier (byte denomination) ----
+    bytes_spilled: int = 0       # COMPRESSED bytes moved device->host
+    bytes_restored: int = 0      # COMPRESSED bytes moved host->device
 
 
 @dataclasses.dataclass
@@ -123,13 +126,18 @@ class KvRetention:
     def __init__(self, page_size: int,
                  session_ttl: Optional[float] = None,
                  host_pool_pages: int = 0,
-                 spill_seconds_per_page: float = 0.0):
+                 spill_seconds_per_page: float = 0.0,
+                 spill_page_bytes: int = 0):
         assert page_size > 0
         assert host_pool_pages >= 0
         self.page_size = page_size
         self.session_ttl = session_ttl
         self.host_pool_pages = host_pool_pages
         self.spill_seconds_per_page = spill_seconds_per_page
+        # bytes one page occupies in the HOST tier (at the spill dtype,
+        # scales included) — what a spill/restore transfer MOVES; 0 in
+        # legacy call sites that never read the byte stats
+        self.spill_page_bytes = spill_page_bytes
         self.prefix = PrefixCache(page_size)
         self.prefix.on_host_drop = self._on_host_drop
         self.sessions: Dict[int, _Session] = {}
@@ -191,6 +199,17 @@ class KvRetention:
     def restores_in_flight(self) -> int:
         return len(self._restores)
 
+    def restore_pages_in_flight(self) -> int:
+        """Device pages currently reserved by in-flight restores —
+        real KV occupancy Eq. (6) would otherwise miss (the pages left
+        the free list at ``restore_begin`` but belong to no table)."""
+        return len(self._restores)
+
+    def restore_backlog_bytes(self) -> int:
+        """Compressed bytes still queued on the modeled PCIe channel —
+        the restore-aware admission term's input (DESIGN.md §4)."""
+        return len(self._restores) * self.spill_page_bytes
+
     # ------------------------------------------------------- pin lifecycle --
     def tick(self, alloc, now: float) -> int:
         """Housekeeping, called by BOTH backends each loop iteration
@@ -242,6 +261,7 @@ class KvRetention:
                 self.prefix.mark_live(node)
                 self.stats.pages_restored += 1
                 self.stats.restored_tokens += self.page_size
+                self.stats.bytes_restored += self.spill_page_bytes
             else:                                 # session tail
                 e = self.sessions.get(obj)
                 if e is None or e.tail_hslot != hslot:
@@ -254,6 +274,7 @@ class KvRetention:
                 e.tail_ready = -1.0
                 self.stats.pages_restored += 1
                 self.stats.restored_tokens += len(e.path) - e.full_tokens
+                self.stats.bytes_restored += self.spill_page_bytes
         self._restores = still
         self._next_restore = min(
             (o.ready_at if k == "node" else self.sessions[o].tail_ready
@@ -592,6 +613,7 @@ class KvRetention:
         self.prefix.mark_spilled(node, h)
         self.stats.pages_spilled += 1
         self.stats.spill_seconds += self.spill_seconds_per_page
+        self.stats.bytes_spilled += self.spill_page_bytes
         return True
 
     def _spill_tail(self, alloc, e: _Session) -> bool:
@@ -610,6 +632,7 @@ class KvRetention:
         e.expires_at = math.inf        # demoted: host LRU owns it now
         self.stats.pages_spilled += 1
         self.stats.spill_seconds += self.spill_seconds_per_page
+        self.stats.bytes_spilled += self.spill_page_bytes
         return True
 
     def _host_slot_for(self, alloc, stamp: int) -> bool:

@@ -99,6 +99,17 @@ class SchedulerBase:
         return getattr(self, "_oom_shrink", 1.0)
 
     # -------------------------------------------------- decode admission --
+    def _pressure_tokens(self) -> int:
+        """Restore-aware admission pricing: Eq.-(6) token-equivalents
+        of the in-flight host-tier restore state (reserved device pages
+        + compressed channel backlog) the monitor's plain in-flight sum
+        misses.  Added to ``in_flight_tokens`` wherever Eq. (6) is
+        consulted, so admission leaves headroom for restores about to
+        land instead of racing them for the same pages."""
+        return self.batcher.admission_pressure_tokens(
+            self.monitor.restore_pages_in_flight,
+            self.monitor.restore_backlog_bytes)
+
     def _live_tokens(self, req: Request) -> int:
         """In-flight KV tokens a live request is charged: prompt +
         output, capped at the sliding/local window (a ring cache never
@@ -149,8 +160,9 @@ class BucketServeScheduler(SchedulerBase):
 
     # -------------------------------------------------------- scheduling --
     def _n_max(self) -> int:
-        return self.batcher.n_max(self.monitor.mean_seq_len(),
-                                  self.monitor.in_flight_tokens)
+        return self.batcher.n_max(
+            self.monitor.mean_seq_len(),
+            self.monitor.in_flight_tokens + self._pressure_tokens())
 
     def _pick_bucket(self) -> Optional[Bucket]:
         """Bucket choice per scheduling tick.  The earliest-online
@@ -180,8 +192,8 @@ class BucketServeScheduler(SchedulerBase):
         has_online = b.earliest_online() is not None
         policy = "fcfs" if has_online else self.sched.offline_policy
         ordered = self.buckets.order_bucket(b, policy)
-        batch = self.batcher.form_batch(ordered,
-                                        self.monitor.in_flight_tokens)
+        batch = self.batcher.form_batch(
+            ordered, self.monitor.in_flight_tokens + self._pressure_tokens())
         if not batch.requests:
             return None
         batch.bucket = b

@@ -266,6 +266,8 @@ class ServeResult:
     spill_hold_events: int = 0           # requests held on a restore
     spill_time_total: float = 0.0        # priced device->host transfer s
     restore_time_total: float = 0.0      # priced host->device transfer s
+    spilled_bytes: int = 0               # COMPRESSED bytes moved dev->host
+    restored_bytes: int = 0              # COMPRESSED bytes moved host->dev
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -404,7 +406,9 @@ class ServingLoop:
                          spill_drops=rt.stats.spill_drops,
                          spill_hold_events=rt.stats.restore_holds,
                          spill_time_total=rt.stats.spill_seconds,
-                         restore_time_total=rt.stats.restore_seconds)
+                         restore_time_total=rt.stats.restore_seconds,
+                         spilled_bytes=rt.stats.bytes_spilled,
+                         restored_bytes=rt.stats.bytes_restored)
         return ServeResult(
             requests=requests, makespan=self.backend.clock.now(),
             busy_prefill=st.busy_p, busy_decode=st.busy_d,
@@ -526,6 +530,12 @@ class ServingLoop:
                 mon.on_spill_traffic(sp - self._spill_seen[0],
                                      re - self._spill_seen[1])
                 self._spill_seen = (sp, re)
+            # restore-aware admission pricing: expose the in-flight
+            # restore LEVEL so Eq. (6) leaves headroom for reserved
+            # pages and the compressed channel backlog
+            if hasattr(mon, "on_restore_state"):
+                mon.on_restore_state(rt.restore_pages_in_flight(),
+                                     rt.restore_backlog_bytes())
 
     def _release_held(self, now: float) -> None:
         """Re-queue parked requests whose restore landed — their next

@@ -161,18 +161,23 @@ class CostModelBackend:
                  prefix_cache: bool = False,
                  session_ttl: Optional[float] = None,
                  host_pool_tokens: Optional[int] = None,
-                 spill_bw: float = 16e9):
+                 spill_bw: float = 16e9,
+                 spill_dtype: str = ""):
         self.cost = cost
         self.clock = VirtualClock()
         self.paged = paged
         self.chunk_tokens = chunk_tokens
         self.flops_per_token = 2.0 * cost.p_active
         self.session_ttl = session_ttl
-        # host spill tier: SAME per-page transfer pricing rule as the
-        # engine (page bytes over the host link), so spill decisions
-        # and hold times agree between the backends
-        self._host_pages = (host_pool_tokens or 0) // page_size
-        self._spill_sec = page_size * cost.kv_per_tok / spill_bw
+        self.spill_dtype = spill_dtype
+        self.page_size = page_size
+        # host spill tier: SAME geometry + per-page transfer pricing
+        # rule as the engine (paging.host_tier_geometry: slots and
+        # seconds both denominated in COMPRESSED spill-dtype bytes), so
+        # spill decisions and hold times agree between the backends
+        self._host_pages, self._slot_bytes = paging.host_tier_geometry(
+            cost.cfg, host_pool_tokens, page_size, spill_dtype)
+        self._spill_sec = self._slot_bytes / spill_bw
         self.retention: Optional[KvRetention] = None
         prefix_cache = prefix_cache or session_ttl is not None
         if prefix_cache:
@@ -180,10 +185,7 @@ class CostModelBackend:
             assert cost.cfg.prefix_cacheable, \
                 f"{cost.cfg.name}: KV retention needs chunk-resumable " \
                 "prefill and purely attention-paged state"
-            self.retention = KvRetention(
-                page_size, session_ttl=session_ttl,
-                host_pool_pages=self._host_pages,
-                spill_seconds_per_page=self._spill_sec)
+            self.retention = self._make_retention()
         else:
             assert not self._host_pages, \
                 "the host spill tier rides on the retention layer"
@@ -193,12 +195,18 @@ class CostModelBackend:
             cfg = cost.cfg
             # the ONE window-cap rule both backends share (parity)
             self._cap = cfg.attn_cache_len(cache_len or cfg.max_seq_len)
-            self.page_size = page_size
-            total = int(kv_pool_tokens or kv_budget)
-            # mirror the engine's sizing EXACTLY (it reserves one page
-            # of the budget as the dead-slot trash page) so identical
-            # kv_pool_tokens yields identical admission decisions
-            n_pages = total // page_size - 1
+            # mirror the engine's sizing EXACTLY (byte-denominated
+            # through the same paging.device_pool_pages rule, one page
+            # of the budget reserved as the dead-slot trash page) so
+            # identical kv_pool_tokens yields identical admission
+            # decisions.  kv_budget needs no re-denomination: it is
+            # ALREADY cache-dtype tokens (kv_budget_tokens divided the
+            # HBM bytes by cache_bytes_per_token)
+            if kv_pool_tokens is not None:
+                n_pages = paging.device_pool_pages(
+                    cfg, int(kv_pool_tokens), page_size) - 1
+            else:
+                n_pages = int(kv_budget) // page_size - 1
             min_pages = -(-self._cap // page_size)
             if kv_pool_tokens is not None and n_pages < min_pages:
                 raise ValueError(
@@ -206,11 +214,24 @@ class CostModelBackend:
                     f"paged pool needs at least "
                     f"{(min_pages + 1) * page_size} tokens (one full "
                     f"request of {min_pages} pages + the trash page)")
-            self.alloc = paging.BlockAllocator(max(n_pages, min_pages),
-                                               page_size,
-                                               host_pages=self._host_pages)
+            self.alloc = self._make_alloc(max(n_pages, min_pages))
         else:
             self._kv_budget = kv_budget
+
+    def _make_retention(self) -> KvRetention:
+        return KvRetention(
+            self.page_size,
+            session_ttl=self.session_ttl,
+            host_pool_pages=self._host_pages,
+            spill_seconds_per_page=self._spill_sec,
+            spill_page_bytes=self._slot_bytes)
+
+    def _make_alloc(self, n_pages: int) -> paging.BlockAllocator:
+        cfg = self.cost.cfg
+        return paging.BlockAllocator(
+            n_pages, self.page_size, host_pages=self._host_pages,
+            page_bytes=self.page_size * max(cfg.cache_bytes_per_token(), 1),
+            host_slot_bytes=self._slot_bytes)
 
     @property
     def prefix_cache(self) -> Optional[PrefixCache]:
@@ -221,14 +242,9 @@ class CostModelBackend:
     def begin(self, requests: Sequence[Request]) -> None:
         self.clock = VirtualClock()
         if self.paged:
-            self.alloc = paging.BlockAllocator(self.alloc.n_pages,
-                                               self.page_size,
-                                               host_pages=self._host_pages)
+            self.alloc = self._make_alloc(self.alloc.n_pages)
         if self.retention is not None:
-            self.retention = KvRetention(
-                self.page_size, session_ttl=self.session_ttl,
-                host_pool_pages=self._host_pages,
-                spill_seconds_per_page=self._spill_sec)
+            self.retention = self._make_retention()
             # the radix index keys on ACTUAL token ids: materialize them
             # through the one shared rule (Request.materialize_tokens —
             # which leaves later session turns for the loop to compose)
@@ -362,7 +378,8 @@ class Simulator:
                  prefix_cache: bool = False,
                  session_ttl: Optional[float] = None,
                  host_pool_tokens: Optional[int] = None,
-                 spill_bw: float = 16e9):
+                 spill_bw: float = 16e9,
+                 spill_dtype: str = ""):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
@@ -387,7 +404,8 @@ class Simulator:
             chunk_tokens=chunk_tokens, paged=paged, page_size=page_size,
             kv_pool_tokens=kv_pool_tokens, cache_len=cache_len,
             prefix_cache=prefix_cache, session_ttl=session_ttl,
-            host_pool_tokens=host_pool_tokens, spill_bw=spill_bw)
+            host_pool_tokens=host_pool_tokens, spill_bw=spill_bw,
+            spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick))

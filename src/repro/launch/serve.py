@@ -31,6 +31,7 @@ repro/sharding/partition.py.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -67,7 +68,8 @@ def _run_sim(cfg, args, reqs):
                     prefix_cache=args.prefix_cache,
                     session_ttl=args.session_ttl if args.sessions else None,
                     host_pool_tokens=args.host_pool_tokens,
-                    spill_bw=args.spill_bw * 1e9)
+                    spill_bw=args.spill_bw * 1e9,
+                    spill_dtype=args.spill_dtype)
     res = sim.run(reqs)
     prefix_info = ""
     if args.prefix_cache:
@@ -83,8 +85,10 @@ def _run_sim(cfg, args, reqs):
             f"{res.sessions_expired} expired; ")
     if args.kv_spill:
         prefix_info += (
-            f"spill: {res.spilled_pages} pages out, "
-            f"{res.restored_pages} back ({res.restored_tokens} tokens), "
+            f"spill[{args.spill_dtype}]: {res.spilled_pages} pages "
+            f"({res.spilled_bytes} B) out, "
+            f"{res.restored_pages} back ({res.restored_tokens} tokens, "
+            f"{res.restored_bytes} B), "
             f"{res.spill_drops} dropped, "
             f"{res.spill_hold_events} holds; ")
     print(f"[sim] served {len(res.finished())}/{len(reqs)} requests in "
@@ -141,6 +145,18 @@ def main():
     ap.add_argument("--spill-bw", type=float, default=16.0,
                     help="host<->device link bandwidth in GB/s used to "
                          "price spill/restore transfers")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8"],
+                    help="device KV pool precision: int8 halves the "
+                         "per-token cache bytes, so the SAME HBM byte "
+                         "budget holds ~2x the pages (Eq. 6 and the "
+                         "paged pool are both byte-denominated)")
+    ap.add_argument("--spill-dtype", default="bf16",
+                    choices=["bf16", "int8", "int4"],
+                    help="host spill tier precision: compressed spill "
+                         "retains 2-4x more transcript pages under the "
+                         "same --host-pool-tokens budget and each "
+                         "restore moves proportionally fewer PCIe bytes")
     ap.add_argument("--pool-tokens", type=int, default=None,
                     help="total pooled KV tokens (default: slots x "
                          "cache_len — the contiguous pool's budget — on "
@@ -166,6 +182,8 @@ def main():
         cfg = get_smoke_config(args.arch, max_seq_len=256)
     else:
         cfg = get_config(args.arch)
+    if args.kv_dtype == "int8" and cfg.kv_cache_dtype != "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
     if args.kv_spill and args.host_pool_tokens is None:
         args.host_pool_tokens = 4 * (args.pool_tokens
                                      or args.slots * cfg.max_seq_len)
@@ -227,7 +245,8 @@ def main():
                            session_ttl=args.session_ttl if args.sessions
                            else None,
                            host_pool_tokens=args.host_pool_tokens,
-                           spill_bw=args.spill_bw * 1e9)
+                           spill_bw=args.spill_bw * 1e9,
+                           spill_dtype=args.spill_dtype)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -258,8 +277,10 @@ def main():
         if args.kv_spill:
             r = engine.result
             paged_info += (
-                f"spill: {r.spilled_pages} pages out, "
-                f"{r.restored_pages} back ({r.restored_tokens} tokens), "
+                f"spill[{args.spill_dtype}]: {r.spilled_pages} pages "
+                f"({r.spilled_bytes} B) out, "
+                f"{r.restored_pages} back ({r.restored_tokens} tokens, "
+                f"{r.restored_bytes} B), "
                 f"{r.spill_drops} dropped, "
                 f"{r.spill_hold_events} holds; ")
     print(f"served {len(done)}/{len(reqs)} requests, {toks} tokens in "

@@ -182,12 +182,42 @@ class ModelConfig:
 
     def cache_bytes_per_token(self) -> int:
         """Runtime per-token cache bytes honoring the serving variant:
-        bf16 (2B) by default, int8 (1B + f32 per-(token,head) scales)."""
+        bf16 (2B) by default, int8 (1B + f32 per-(token,head) scales).
+        This is the HOT-tier (device pool) denomination — the spill
+        tier's is :meth:`spill_bytes_per_token`."""
         if self.kv_cache_dtype == "int8":
             n_attn = self.kv_bytes_per_token(1) // max(
                 2 * self.n_kv_heads * self.d_head, 1)
             return self.kv_bytes_per_token(1) +                 2 * n_attn * self.n_kv_heads * 4
         return self.kv_bytes_per_token(2)
+
+    def spill_bytes_per_token(self, spill_dtype: str = "") -> int:
+        """Per-token bytes one KV token occupies in the HOST spill tier
+        (DESIGN.md §3 "Tier precision") — precision is a property of
+        the tier, so the cold tier may be narrower than the hot pool:
+
+        * ``""``/``"bf16"`` — pass-through: pages spill at the hot
+          pool's own width (``cache_bytes_per_token``), bit-exactly;
+        * ``"int8"`` — 1 B/element plus f32 per-(token, head) scales
+          (for an int8 hot pool this IS the pass-through width — the
+          pool's int8 payload and scale planes spill verbatim);
+        * ``"int4"`` — two elements packed per byte plus the same f32
+          scale planes (the scales don't shrink: they are what bounds
+          the dequantization error).
+
+        Both execution backends size host slots and price the modeled
+        PCIe channel from this ONE number, so quantized spill counts
+        and restore times hold under backend parity."""
+        if spill_dtype in ("", "bf16"):
+            return self.cache_bytes_per_token()
+        n_attn = self.kv_bytes_per_token(1) // max(
+            2 * self.n_kv_heads * self.d_head, 1)
+        scales = 2 * n_attn * self.n_kv_heads * 4
+        if spill_dtype == "int8":
+            return self.kv_bytes_per_token(1) + scales
+        if spill_dtype == "int4":
+            return max(self.kv_bytes_per_token(1) // 2, 1) + scales
+        raise ValueError(f"unknown spill dtype {spill_dtype!r}")
 
     def state_bytes(self, bytes_per_el: int = 2) -> int:
         """Sequence-length-independent per-request state (SSM/hybrid)."""

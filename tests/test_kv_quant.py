@@ -11,7 +11,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import transformer as tfm
-from repro.models.attention import dequantize_kv, quantize_kv
+from repro.models.attention import (dequantize_kv, dequantize_kv_int4,
+                                    pack_int4, quantize_kv,
+                                    quantize_kv_int4, unpack_int4)
 
 
 @settings(max_examples=30, deadline=None)
@@ -61,6 +63,61 @@ def test_int8_with_sliding_window_ring():
         nt = logits.argmax(-1).astype(jnp.int32)
         logits, cache = tfm.decode_step(cfg, params, nt, cache)
         assert bool(jnp.isfinite(logits).all())
+
+
+# ------------------------------------------- int4 spill-tier compression --
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 17), st.integers(1, 5))
+def test_int4_pack_unpack_roundtrip(seed, n, rows):
+    """Exact nibble roundtrip over the full signed 4-bit range,
+    including -8 and ODD last-axis lengths (zero-padded tail)."""
+    q = np.random.default_rng(seed).integers(
+        -8, 8, (rows, n)).astype(np.int8)
+    p = pack_int4(q)
+    assert p.dtype == np.uint8 and p.shape == (rows, (n + 1) // 2)
+    assert np.array_equal(unpack_int4(p, n), q)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(1, 19),
+       st.floats(0.01, 100.0))
+def test_int4_quant_roundtrip_error_bound(s, h, d, scale):
+    """Symmetric int4: per-row error <= scale/7 * 0.5 quantization
+    step; one f32 scale per (token, head) row (broadcasting), packed
+    payload is ceil(Dh/2) bytes (odd page tails)."""
+    rng = np.random.default_rng(s * 31 + h * 7 + d)
+    x = (rng.standard_normal((2, s, h, d)) * scale).astype(np.float32)
+    packed, sc = quantize_kv_int4(x)
+    assert sc.shape == x.shape[:-1] and sc.dtype == np.float32
+    assert packed.shape == x.shape[:-1] + ((d + 1) // 2,)
+    back = dequantize_kv_int4(packed, sc, d)
+    bound = np.abs(x).max(axis=-1, keepdims=True) / 7.0 * 0.51
+    assert (np.abs(back - x) <= bound + 1e-6).all()
+
+
+def test_int4_dequantize_target_dtype():
+    x = np.linspace(-3.0, 3.0, 32, dtype=np.float32).reshape(2, 16)
+    packed, sc = quantize_kv_int4(x)
+    back = dequantize_kv_int4(packed, sc, 16, dtype=np.float16)
+    assert back.dtype == np.float16 and back.shape == x.shape
+
+
+def test_spill_bytes_per_token_ladder():
+    """Tier precision is a BYTE property of the config: int8 roughly
+    halves and int4 roughly quarters the per-token spill footprint
+    (per-page f32 scale planes included), and bf16 spill is exactly
+    the hot-tier cache footprint."""
+    cfg = get_config("llama2-13b")
+    bf16 = cfg.spill_bytes_per_token("")
+    i8 = cfg.spill_bytes_per_token("int8")
+    i4 = cfg.spill_bytes_per_token("int4")
+    assert bf16 == cfg.cache_bytes_per_token()
+    assert bf16 == cfg.spill_bytes_per_token("bf16")
+    assert i4 < i8 < bf16
+    assert i8 <= 0.55 * bf16          # ~2x incl. scale overhead
+    assert i4 <= 0.30 * bf16          # ~4x incl. scale overhead
+    with pytest.raises(ValueError):
+        cfg.spill_bytes_per_token("fp8")
 
 
 def test_variant_registry():

@@ -23,8 +23,10 @@ import dataclasses
 
 import pytest
 
+from repro.configs import get_config
 from repro.core.paging import (BlockAllocator, admit_blocks,
-                               extend_for_decode)
+                               device_pool_pages, extend_for_decode,
+                               host_tier_geometry)
 from repro.core.request import Request
 
 try:
@@ -131,6 +133,68 @@ class TestBlockAllocator:
         a.alloc(1, 24, shared=t0[:2])                # 2 shared + 1 private
         assert a.reclaimable(0) == 0                 # both pages shared
         assert a.reclaimable(1) == 1                 # only its private page
+
+    def test_byte_denominated_tier_accounting(self):
+        """Device and host occupancy are priced in each tier's OWN
+        bytes: a spilled page stops costing device bytes and starts
+        costing (smaller, compressed) host-slot bytes."""
+        a = BlockAllocator(n_pages=4, page_size=8, host_pages=2,
+                           page_bytes=1024, host_slot_bytes=288)
+        a.alloc(0, 17)                               # 3 pages
+        assert a.device_bytes_in_use() == 3 * 1024
+        assert a.host_bytes_in_use() == 0
+        t = a.alloc(1, 8)
+        a.pin(t[0])
+        a.release(1)
+        h = a.spill(t[0])
+        assert h is not None
+        assert a.device_bytes_in_use() == 3 * 1024   # page's HBM freed
+        assert a.host_bytes_in_use() == 288          # compressed slot
+        p = a.restore_begin(h)
+        a.restore_commit(h)
+        assert a.host_bytes_in_use() == 0
+        assert a.device_bytes_in_use() == 4 * 1024
+        a.unpin(p)
+
+
+class TestTierByteDenomination:
+    """Tentpole: pool sizing is byte-denominated per tier.  The token
+    budgets (``kv_pool_tokens`` / ``host_pool_tokens``) are
+    bf16-REFERENCE byte quantities, so a compressed tier fits more
+    pages under the SAME budget — and the bf16 tier is bit-compatible
+    with the old token-denominated sizing."""
+
+    def test_bf16_pool_backcompat_exact(self):
+        cfg = get_config("llama2-13b")
+        assert device_pool_pages(cfg, 64 * 128, 128) == 64
+        n, slot = host_tier_geometry(cfg, 64 * 128, 128, "")
+        assert n == 64
+        assert slot == 128 * cfg.cache_bytes_per_token()
+
+    def test_int8_pool_nearly_doubles_pages(self):
+        pages = device_pool_pages(get_config("llama2-13b"), 64 * 128, 128)
+        pages8 = device_pool_pages(get_config("llama2-13b", variant="int8"),
+                                   64 * 128, 128)
+        assert pages8 >= int(1.8 * pages)
+
+    def test_host_geometry_compression_ladder(self):
+        cfg = get_config("llama2-13b")
+        budget_tokens = 64 * 128
+        slots = {}
+        for dt in ("", "int8", "int4"):
+            n, slot = host_tier_geometry(cfg, budget_tokens, 128, dt)
+            assert slot == 128 * cfg.spill_bytes_per_token(dt)
+            # never oversubscribes the byte budget
+            assert n * slot <= budget_tokens * cfg.kv_bytes_per_token(2)
+            slots[dt] = n
+        assert slots["int8"] >= int(1.8 * slots[""])
+        assert slots["int4"] >= 2 * slots[""]
+
+    def test_no_budget_means_no_host_tier(self):
+        cfg = get_config("llama2-13b")
+        for dt in ("", "int8", "int4"):
+            n, _ = host_tier_geometry(cfg, None, 128, dt)
+            assert n == 0
 
 
 class TestSharedPolicies:
@@ -346,7 +410,11 @@ if HAVE_HYPOTHESIS:
                page=st.sampled_from([1, 8, 128]))
         def test_spill_restore_interleavings_hold_invariants(
                 self, ops, n_pages, host_pages, page):
-            a = BlockAllocator(n_pages, page, host_pages=host_pages)
+            # deliberately asymmetric byte prices: device pages cost
+            # 4x what a (compressed) host slot costs
+            a = BlockAllocator(n_pages, page, host_pages=host_pages,
+                               page_bytes=page * 4,
+                               host_slot_bytes=page + 1)
             tables = {}                  # rid -> expected table
             pins = []                    # caller-held page pins (dups ok)
             spilled = []                 # caller-owned host slots at rest
@@ -432,3 +500,9 @@ if HAVE_HYPOTHESIS:
                 # no host slot double-assigned
                 assert len(set(spilled) | set(restoring)) \
                     == len(spilled) + len(restoring)
+                # byte denomination follows the page/slot counts in
+                # each tier's OWN prices (quantized spill accounting)
+                assert a.device_bytes_in_use() \
+                    == a.live_pages() * page * 4
+                assert a.host_bytes_in_use() \
+                    == (len(spilled) + len(restoring)) * (page + 1)
