@@ -16,7 +16,7 @@ import time
 
 from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
                fig6_overhead, kv_quant, kv_spill, prefix_cache, roofline,
-               session_reuse, waste_model)
+               session_reuse, trace_replay, waste_model)
 
 TABLES = {
     "fig5_offline": fig5_offline.main,     # Fig. 5a/5b
@@ -29,6 +29,7 @@ TABLES = {
     "prefix_cache": prefix_cache.main,     # beyond-paper: prefix sharing
     "session_reuse": session_reuse.main,   # beyond-paper: session resume
     "kv_spill": kv_spill.main,             # beyond-paper: host spill tier
+    "trace_replay": trace_replay.main,     # beyond-paper: burst tails
     "roofline": roofline.main,             # §Roofline (dry-run derived)
 }
 

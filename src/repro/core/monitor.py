@@ -27,6 +27,24 @@ class Snapshot:
     session_hit_tokens: int = 0
     spilled_pages: int = 0
     restored_pages: int = 0
+    # live tail-latency state (PR 7): nearest-rank percentiles over the
+    # rolling TTFT/TPOT sample windows — what an SLO-aware scheduler
+    # steers on (a mean hides exactly the tail it must protect)
+    ttft_p50: float = 0.0
+    ttft_p99: float = 0.0
+    tpot_p50: float = 0.0
+    tpot_p99: float = 0.0
+
+
+def _nearest_rank(xs, q: float) -> float:
+    """Nearest-rank percentile (ceil(q/100 * n)-th sorted sample); 0.0
+    on an empty series.  The SAME rule ServeResult uses, so live
+    snapshots and post-run gates can never disagree on definition."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    rank = max(-(-int(q * len(s)) // 100), 1)   # ceil without float error
+    return s[min(rank, len(s)) - 1]
 
 
 class GlobalMonitor:
@@ -35,6 +53,10 @@ class GlobalMonitor:
         self.arrivals: Deque[float] = collections.deque()
         self.seq_lens: Deque[int] = collections.deque(maxlen=512)
         self.batch_lat: Deque[float] = collections.deque(maxlen=512)
+        # rolling tail-latency samples (PR 7), fed by the ServingLoop
+        # at first-token / retirement time
+        self.ttft_samples: Deque[float] = collections.deque(maxlen=512)
+        self.tpot_samples: Deque[float] = collections.deque(maxlen=512)
         self.history: List[Snapshot] = []
         self.in_flight_tokens = 0
         self.decode_pool = 0
@@ -80,6 +102,14 @@ class GlobalMonitor:
 
     def on_batch(self, latency_s: float) -> None:
         self.batch_lat.append(latency_s)
+
+    def on_first_token(self, ttft_s: float, cls: str = "") -> None:
+        """A request produced its first token ``ttft_s`` after arrival."""
+        self.ttft_samples.append(ttft_s)
+
+    def on_tpot(self, tpot_s: float, cls: str = "") -> None:
+        """A request finished with a per-output-token latency sample."""
+        self.tpot_samples.append(tpot_s)
 
     def on_prefix_lookup(self, hit_tokens: int, page_size: int) -> None:
         """One admitted request matched against the prefix cache:
@@ -138,12 +168,20 @@ class GlobalMonitor:
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / max(self.prefix_lookups, 1)
 
+    def ttft_percentile(self, q: float) -> float:
+        return _nearest_rank(self.ttft_samples, q)
+
+    def tpot_percentile(self, q: float) -> float:
+        return _nearest_rank(self.tpot_samples, q)
+
     def snapshot(self, t: float) -> Snapshot:
         s = Snapshot(t, self.queue_len, self.decode_pool,
                      self.in_flight_tokens, self.arrival_rate(),
                      self.mean_seq_len(), self.n_buckets, self.kv_util(),
                      self.prefix_hit_rate(), self.prefix_pages_saved,
                      self.session_hits, self.session_hit_tokens,
-                     self.spilled_pages, self.restored_pages)
+                     self.spilled_pages, self.restored_pages,
+                     self.ttft_percentile(50), self.ttft_percentile(99),
+                     self.tpot_percentile(50), self.tpot_percentile(99))
         self.history.append(s)
         return s

@@ -23,6 +23,13 @@ class Request:
     slo_ttft: float = 2.0                # time-to-first-token SLO (s)
     slo_tpot: float = 0.2                # time-per-output-token SLO (s)
     tokens: Optional[np.ndarray] = None  # actual token ids (real engine)
+    # request class tag for heterogeneous traffic (data/workload.py /
+    # data/trace.py): "chat" | "longctx" | "batch" | "" (untagged
+    # classic workloads).  The SLO budgets above are per-class under a
+    # heterogeneous mix and travel WITH the request through trace
+    # record/replay, so tail gates and the SLO scheduler read budgets
+    # off the request, never off a workload-global spec.
+    cls: str = ""
 
     # --- multi-turn sessions (core/retention.py) ---
     # Turn t (> 0) of a conversation: its prompt is the FULL transcript

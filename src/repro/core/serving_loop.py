@@ -272,6 +272,53 @@ class ServeResult:
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
 
+    # ---- tail-latency percentiles (PR 7) ----------------------------
+    # Gates are on P99, not means: a mean hides the convoy-effect tail
+    # that SLO attainment is actually about (DESIGN.md §6).  Nearest-
+    # rank percentiles (ceil(q/100 * n)-th sorted sample) so hand-built
+    # test series have exact expected values — no interpolation.
+
+    def classes(self) -> List[str]:
+        """Distinct request class tags present (sorted; '' excluded)."""
+        return sorted({r.cls for r in self.requests if r.cls})
+
+    def incomplete(self, cls: Optional[str] = None) -> int:
+        """Requests that never produced a first token (dropped or still
+        queued at time limit).  EXCLUDED from the TTFT series — an inf
+        sample would poison every percentile above its rank — but
+        reported here so a run can't quietly shed its tail."""
+        return sum(1 for r in self.requests
+                   if r.first_token < 0 and (cls is None or r.cls == cls))
+
+    def ttft_series(self, cls: Optional[str] = None) -> List[float]:
+        return [r.ttft() for r in self.requests
+                if r.first_token >= 0 and (cls is None or r.cls == cls)]
+
+    def tpot_series(self, cls: Optional[str] = None) -> List[float]:
+        # needs >= 2 tokens for a per-token interval to exist
+        return [r.tpot() for r in self.requests
+                if r.finished >= 0 and r.generated > 1
+                and (cls is None or r.cls == cls)]
+
+    def percentile(self, q: float, metric: str = "ttft",
+                   cls: Optional[str] = None) -> float:
+        assert metric in ("ttft", "tpot"), metric
+        xs = sorted(self.ttft_series(cls) if metric == "ttft"
+                    else self.tpot_series(cls))
+        if not xs:
+            return float("nan")
+        rank = max(int(math.ceil(q / 100.0 * len(xs))), 1)
+        return xs[rank - 1]
+
+    def p50(self, metric: str = "ttft", cls: Optional[str] = None) -> float:
+        return self.percentile(50.0, metric, cls)
+
+    def p95(self, metric: str = "ttft", cls: Optional[str] = None) -> float:
+        return self.percentile(95.0, metric, cls)
+
+    def p99(self, metric: str = "ttft", cls: Optional[str] = None) -> float:
+        return self.percentile(99.0, metric, cls)
+
     def throughput_tok_s(self) -> float:
         toks = sum(r.generated + r.prompt_len for r in self.finished())
         return toks / max(self.makespan, 1e-9)
@@ -289,10 +336,14 @@ class ServeResult:
     def session_hit_rate(self) -> float:
         return self.session_hits / max(self.session_lookups, 1)
 
-    def slo_attainment(self) -> float:
-        if not self.requests:
+    def slo_attainment(self, cls: Optional[str] = None) -> float:
+        """Fraction of requests meeting BOTH SLO budgets (per-request
+        budgets — under a heterogeneous mix each class carries its own).
+        Optional ``cls`` filters to one class."""
+        reqs = [r for r in self.requests if cls is None or r.cls == cls]
+        if not reqs:
             return 0.0
-        return sum(r.slo_met() for r in self.requests) / len(self.requests)
+        return sum(r.slo_met() for r in reqs) / len(reqs)
 
     def utilization(self, hw) -> float:
         """Model-FLOPs utilization over the busy window (the cost model's
@@ -345,11 +396,15 @@ class ServingLoop:
     """Drives a scheduler policy against an :class:`ExecutionBackend`."""
 
     def __init__(self, scheduler, backend: ExecutionBackend,
-                 config: LoopConfig = LoopConfig()):
+                 config: LoopConfig = LoopConfig(), recorder=None):
         assert config.mode in ("disagg", "coupled", "static"), config.mode
         self.sched = scheduler
         self.backend = backend
         self.cfg = config
+        # optional TraceRecorder (data/trace.py): pristine request
+        # snapshots after backend.begin + the run's dispatch/requeue/
+        # turn event log (the replay bit-identity surface)
+        self.recorder = recorder
 
     # ------------------------------------------------------------- run ----
     def run(self, requests: List[Request], time_limit: float = 3600.0,
@@ -375,6 +430,11 @@ class ServingLoop:
         self.job: Optional[PrefillJob] = None
         self.st = _LoopState(kv_budget=self.backend.kv_budget_tokens())
         self.backend.begin(requests)
+        if self.recorder is not None:
+            # AFTER begin (prompt ids materialized), BEFORE the loop
+            # mutates state (requeues overwrite arrivals, session turns
+            # get composed prompts) — see data/trace.py contract
+            self.recorder.on_begin(requests)
         if self.cfg.mode == "disagg":
             self._run_overlapped(time_limit)
         else:
@@ -457,6 +517,15 @@ class ServingLoop:
     def _live_tokens(pool: Sequence[Request]) -> int:
         return sum(r.prompt_len + r.generated for r in pool)
 
+    def _requeue(self, r: Request, t: float) -> None:
+        """THE re-queue funnel: every path that puts a request back in
+        the arrival queue (OOM restart, slot/page clamp, preemption,
+        restore-hold release) goes through here, so the recorder sees
+        every re-arrival and stats are never double-counted."""
+        self.sched.on_arrival(r, t, requeue=True)
+        if self.recorder is not None:
+            self.recorder.on_requeue(r, t)
+
     def _handle_oom(self, batch: FormedBatch, now: float) -> None:
         """Evict + re-queue; oversized singletons are dropped (unservable);
         the scheduler's retry backoff (notify_oom) shrinks its next cap.
@@ -471,13 +540,24 @@ class ServingLoop:
                 self._retire(r, now)
                 continue
             r.arrival = now + self.cfg.restart_penalty
-            self.sched.on_arrival(r, r.arrival, requeue=True)
+            self._requeue(r, r.arrival)
+
+    def _note_first(self, r: Request) -> None:
+        """First token just stamped: feed the TTFT sample to the monitor
+        so snapshots expose live tail percentiles."""
+        mon = getattr(self.sched, "monitor", None)
+        if mon is not None and hasattr(mon, "on_first_token"):
+            mon.on_first_token(r.ttft(), r.cls)
 
     # ----------------------------------------------- sessions (retirement) --
     def _retire(self, r: Request, end: float) -> None:
         """A request left the system (finished or dropped): count it
         done and, if it was a session turn, unlock the next one."""
         self.st.done += 1
+        if r.finished >= 0 and r.generated > 1:
+            mon = getattr(self.sched, "monitor", None)
+            if mon is not None and hasattr(mon, "on_tpot"):
+                mon.on_tpot(r.tpot(), r.cls)
         self._unlock_next_turn(r, end)
 
     def _unlock_next_turn(self, r: Request, end: float) -> None:
@@ -512,6 +592,8 @@ class ServingLoop:
             nxt.tokens = prompt
             nxt.history_tokens = r.prompt_len + len(gen)
         nxt.arrival = end + max(nxt.think_gap, 0.0)
+        if self.recorder is not None:
+            self.recorder.on_turn(nxt, nxt.arrival)
         bisect.insort(self._arrivals, nxt, lo=self.st.ai,
                       key=lambda q: q.arrival)
 
@@ -547,7 +629,7 @@ class ServingLoop:
                 r.spill_wait = -1.0
                 # arrival stays untouched: the hold is queueing delay,
                 # so the restore latency lands on this request's TTFT
-                self.sched.on_arrival(r, now, requeue=True)
+                self._requeue(r, now)
 
     def _form_batch(self, now: float, *,
                     count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
@@ -564,7 +646,7 @@ class ServingLoop:
             free = self.backend.free_slots()
             if batch.size > free:                    # slot-capacity clamp
                 for r in batch.requests[free:]:
-                    self.sched.on_arrival(r, now, requeue=True)
+                    self._requeue(r, now)
                 batch = FormedBatch(batch.requests[:free], batch.pad_to,
                                     bucket=batch.bucket)
         if math.isfinite(st.kv_budget):
@@ -587,7 +669,7 @@ class ServingLoop:
                     # would throw away restorable KV
                     self._held_restore.append([r.spill_wait, r])
                 else:
-                    self.sched.on_arrival(r, now, requeue=True)
+                    self._requeue(r, now)
             if n_blk == 0:
                 return None, False
             batch = FormedBatch(batch.requests[:n_blk], batch.pad_to,
@@ -601,6 +683,8 @@ class ServingLoop:
                 mon.on_prefix_lookup(r.prefix_hit_tokens, pc.page_size)
                 if r.session_hit_tokens:
                     mon.on_session_hit(r.session_hit_tokens)
+        if self.recorder is not None:
+            self.recorder.on_dispatch("prefill", batch.requests, now)
         return batch, False
 
     def _account_prefill_batch(self, batch: FormedBatch,
@@ -632,7 +716,7 @@ class ServingLoop:
             r.prefix_hit_tokens = 0       # re-matched at the next admission
             r.session_hit_tokens = 0
             r.arrival = now + self.cfg.restart_penalty
-            self.sched.on_arrival(r, r.arrival, requeue=True)
+            self._requeue(r, r.arrival)
             self.st.preempts += 1
         return bool(victims)
 
@@ -741,6 +825,7 @@ class ServingLoop:
             for r in batch.requests:
                 r.first_token = end
                 r.generated = 1
+                self._note_first(r)
                 if r.generated >= r.max_new_tokens \
                         or not self.backend.supports_decode:
                     r.finished = end
@@ -840,6 +925,7 @@ class ServingLoop:
                     r.prefill_start = now
                     r.first_token = end          # interference: full iter
                     r.generated = 1
+                    self._note_first(r)
                 st.busy_p += pdt
                 st.t_pre += pdt * batch.size
                 st.prefill_tok += batch.pad_to * batch.size
@@ -889,6 +975,7 @@ class ServingLoop:
             r.prefill_start = now
             r.first_token = t
             r.generated = 1
+            self._note_first(r)
             sched.admit_decode(r)
         iters = max(r.max_new_tokens for r in batch.requests) - 1
         for i in range(1, iters + 1):

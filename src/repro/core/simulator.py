@@ -379,7 +379,8 @@ class Simulator:
                  session_ttl: Optional[float] = None,
                  host_pool_tokens: Optional[int] = None,
                  spill_bw: float = 16e9,
-                 spill_dtype: str = ""):
+                 spill_dtype: str = "",
+                 recorder=None):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
@@ -408,7 +409,8 @@ class Simulator:
             spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
-            restart_penalty=restart_penalty, tick=tick))
+            restart_penalty=restart_penalty, tick=tick),
+            recorder=recorder)
 
     def run(self, requests: List[Request],
             time_limit: float = 3600.0) -> SimResult:

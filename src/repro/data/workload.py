@@ -19,6 +19,22 @@ dataset's length distribution.  Requests carrying tokens flow through
 both execution backends unchanged, so the engine and the cost model
 see bit-identical prompts.
 
+Heterogeneous trace family (PR 7, for trace-driven traffic +
+tail-latency gates, data/trace.py): ``class_mix`` nonempty mixes three
+request classes in ONE arrival stream — ``chat`` (short prompts, tight
+TTFT SLO), ``longctx`` (heavy-tailed long-document prompts, relaxed
+TTFT), ``batch`` (offline bulk generation, throughput-only SLO) — the
+heterogeneous mix UELLM (arXiv 2409.14961) targets.  Arrivals are a
+non-homogeneous Poisson process: a sinusoidal diurnal envelope plus
+Poisson-arriving burst windows push the instantaneous rate up to
+``burst_factor`` x the steady ``rps`` (sampled by thinning against the
+peak rate, so the empirical rate tracks ``rate_envelope`` exactly in
+expectation).  Each class carries its OWN SLO budgets (CLASS_SLOS)
+attached per request.  Composable with the prefix/session knobs: with
+``prefix_groups`` every request draws a shared system prompt; with
+``sessions`` the first N chat-class arrivals become multi-turn
+conversations.
+
 Multi-turn conversation family (PR 4, for the session retention layer,
 core/retention.py): ``sessions > 0`` generates ``sessions x turns``
 requests.  Turn 0 of a session is a normal materialized prompt; turn
@@ -36,7 +52,8 @@ regenerates bit-identical requests across calls and backends.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List
+import math
+from typing import Callable, Iterator, List, Tuple
 
 import numpy as np
 
@@ -44,6 +61,21 @@ from repro.core.request import Request, TaskType
 
 ALPACA_MEAN = 83.0
 LONGBENCH_MEDIAN = 41417.0
+
+# Per-class SLO budgets (TTFT s, TPOT s) for the heterogeneous family.
+# Values are attached to every emitted Request — trace record/replay
+# and the SLO scheduler read budgets off the REQUEST, never off the
+# spec.  "batch" is offline bulk work: budgets are deliberately loose
+# (finite so they stay JSON-serializable in traces) — batch goodput is
+# throughput, not latency.
+CLASS_SLOS = {
+    "chat": (2.0, 0.2),
+    "longctx": (10.0, 0.4),
+    "batch": (120.0, 2.0),
+}
+
+DEFAULT_CLASS_MIX: Tuple[Tuple[str, float], ...] = (
+    ("chat", 0.60), ("longctx", 0.15), ("batch", 0.25))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +101,12 @@ class WorkloadSpec:
     think_time_s: float = 0.0      # mean think-time gap between turns
     utterance_tokens: int = 0      # new-user-tokens per later turn
     #                                (0 = sample the dataset distribution)
+    # ---- heterogeneous trace family (empty = no class mixing) ----
+    class_mix: Tuple[Tuple[str, float], ...] = ()   # ((name, weight), ...)
+    burst_factor: float = 1.0      # peak/steady arrival-rate ratio
+    diurnal_period_s: float = 60.0  # sinusoidal modulation period
+    burst_every_s: float = 30.0    # mean gap between Poisson burst windows
+    burst_duration_s: float = 3.0  # width of each burst window
 
 
 def _sample_prompt_lens(rng, dataset: str, n: int, max_len: int):
@@ -103,6 +141,175 @@ def _sample_output_lens(rng, dataset: str, n: int):
         out = np.where(half, rng.lognormal(np.log(300), 0.6, n),
                        rng.lognormal(np.log(350), 0.5, n))
     return np.clip(out, 4, 1024).astype(np.int64)
+
+
+# ---------------------------------------- heterogeneous trace family ----
+def trace_horizon(spec: WorkloadSpec) -> float:
+    """Time window the burst-window process is materialized over: a
+    generous multiple of the steady-state drain time, so the thinning
+    sampler practically never outruns it (past the horizon the envelope
+    degrades gracefully to the diurnal part alone)."""
+    return 4.0 * spec.n_requests / max(spec.rps, 1e-9) \
+        + 2.0 * max(spec.diurnal_period_s, 1.0)
+
+
+def burst_windows(spec: WorkloadSpec) -> List[Tuple[float, float]]:
+    """Poisson-arriving burst windows over [0, horizon).  Drawn from a
+    DISJOINT rng stream keyed on the spec seed, so toggling burst knobs
+    never shifts the length/class draws of the main stream."""
+    if spec.burst_factor <= 1.0 or spec.burst_every_s <= 0:
+        return []
+    rng = np.random.default_rng([spec.seed, 0xB065])
+    horizon = trace_horizon(spec)
+    wins, t = [], 0.0
+    while True:
+        t += float(rng.exponential(spec.burst_every_s))
+        if t >= horizon:
+            return wins
+        wins.append((t, t + spec.burst_duration_s))
+
+
+def rate_envelope(spec: WorkloadSpec, t: float,
+                  windows: List[Tuple[float, float]]) -> float:
+    """Instantaneous arrival rate lambda(t): steady ``rps`` modulated by
+    a sinusoidal diurnal swing, overridden to the full ``burst_factor``
+    inside a burst window; never exceeds rps * burst_factor (the
+    thinning bound)."""
+    bf = max(spec.burst_factor, 1.0)
+    m = 1.0
+    if spec.diurnal_period_s > 0 and bf > 1.0:
+        m += (bf - 1.0) * 0.5 * (1.0 - math.cos(
+            2.0 * math.pi * t / spec.diurnal_period_s))
+    for lo, hi in windows:
+        if lo <= t < hi:
+            m = bf
+            break
+        if lo > t:
+            break
+    return spec.rps * min(m, bf)
+
+
+def envelope_fn(spec: WorkloadSpec) -> Callable[[float], float]:
+    """The exact lambda(t) the generator thinned against — the property
+    test compares empirical bin rates to this."""
+    wins = burst_windows(spec)
+    return lambda t: rate_envelope(spec, t, wins)
+
+
+def _bursty_arrivals(spec: WorkloadSpec, rng) -> np.ndarray:
+    """Non-homogeneous Poisson arrivals by thinning against the peak
+    rate rps * burst_factor."""
+    lam = envelope_fn(spec)
+    lam_max = spec.rps * max(spec.burst_factor, 1.0)
+    out, t = [], 0.0
+    while len(out) < spec.n_requests:
+        t += float(rng.exponential(1.0 / max(lam_max, 1e-9)))
+        if float(rng.random()) * lam_max <= lam(t):
+            out.append(t)
+    return np.asarray(out)
+
+
+def _generate_heterogeneous(spec: WorkloadSpec, rng) -> List[Request]:
+    """Three-class mixed stream (see module doc).  All randomness flows
+    through ``rng`` in a FIXED order (arrivals, classes, per-class
+    length tables, then per-request materialization), so the same spec
+    regenerates a bit-identical workload."""
+    mix = spec.class_mix
+    names = [c for c, _ in mix]
+    w = np.asarray([max(float(p), 0.0) for _, p in mix])
+    assert w.sum() > 0, "class_mix weights must not all be zero"
+    for c in names:
+        assert c in CLASS_SLOS, f"unknown request class {c!r}"
+    n = spec.n_requests
+    arrivals = _bursty_arrivals(spec, rng)
+    cls_idx = rng.choice(len(names), size=n, p=w / w.sum())
+    max_len = spec.max_model_len
+    # per-class length tables (sampled in full, selected by mask — the
+    # same pattern the "mixed" dataset uses, so draws stay vectorized
+    # and deterministic)
+    plens_by = {
+        "chat": _sample_prompt_lens(rng, "alpaca", n, max_len),
+        "longctx": _sample_prompt_lens(rng, "longbench", n, max_len),
+        "batch": np.clip(rng.lognormal(np.log(900.0), 0.8, n),
+                         4, max_len - 1).astype(np.int64),
+    }
+    olens_by = {
+        "chat": _sample_output_lens(rng, "alpaca", n),
+        "longctx": _sample_output_lens(rng, "longbench", n),
+        "batch": np.clip(rng.lognormal(np.log(700.0), 0.6, n),
+                         16, 2048).astype(np.int64),
+    }
+    plens = np.asarray([plens_by[names[c]][i]
+                        for i, c in enumerate(cls_idx)], np.int64)
+    olens = np.asarray([olens_by[names[c]][i]
+                        for i, c in enumerate(cls_idx)], np.int64)
+    if spec.max_new_tokens > 0:
+        olens = np.full(n, spec.max_new_tokens, np.int64)
+    # shared-prefix composability: identical materialization rule to the
+    # classic family (N system prompts, Zipf reuse, dataset lengths
+    # become suffix lengths)
+    tokens: List = [None] * n
+    if spec.prefix_groups > 0:
+        assert spec.prefix_zipf > 1.0, "np Zipf needs skew > 1"
+        pre = min(max(spec.prefix_tokens, 1), max_len - 2)
+        prefixes = [rng.integers(0, spec.vocab_size, pre).astype(np.int32)
+                    for _ in range(spec.prefix_groups)]
+        groups = (rng.zipf(spec.prefix_zipf, n) - 1) % spec.prefix_groups
+        slens = np.clip(plens, 1, max_len - 1 - pre)
+        for i in range(n):
+            suffix = rng.integers(0, spec.vocab_size,
+                                  int(slens[i])).astype(np.int32)
+            tokens[i] = np.concatenate([prefixes[int(groups[i])], suffix])
+        plens = pre + slens
+    olens = np.maximum(np.minimum(olens, max_len - plens), 1)
+    # session composability: the first ``sessions`` chat-class arrivals
+    # become multi-turn conversations (transcript growth, PR 4 shape)
+    session_of: dict = {}
+    if spec.sessions > 0:
+        chat_ix = [i for i in range(n) if names[cls_idx[i]] == "chat"]
+        for s, i in enumerate(chat_ix[:spec.sessions]):
+            session_of[i] = s
+    reqs: List[Request] = []
+    rid = 0
+    for i in range(n):
+        cls = names[cls_idx[i]]
+        slo_ttft, slo_tpot = CLASS_SLOS[cls]
+        task = TaskType.OFFLINE if cls == "batch" else spec.task_type
+        if i not in session_of:
+            reqs.append(Request(
+                rid=rid, prompt_len=int(plens[i]),
+                max_new_tokens=int(olens[i]), arrival=float(arrivals[i]),
+                task_type=task, slo_ttft=slo_ttft, slo_tpot=slo_tpot,
+                tokens=tokens[i], cls=cls))
+            rid += 1
+            continue
+        # a chat session head: emit its turns (window-budgeted exactly
+        # like _generate_sessions; the ServingLoop composes turn > 0
+        # prompts from actual generated ids at unlock time)
+        sid = session_of[i]
+        transcript = 0
+        for t in range(spec.turns):
+            room = max_len - transcript - 2
+            if room < 1:
+                break
+            ulen = spec.utterance_tokens or int(_sample_prompt_lens(
+                rng, "alpaca", 1, max_len)[0])
+            ulen = max(1, min(ulen, room))
+            out = int(spec.max_new_tokens
+                      or _sample_output_lens(rng, "alpaca", 1)[0])
+            out = max(1, min(out, max_len - transcript - ulen))
+            utter = rng.integers(0, spec.vocab_size, ulen).astype(np.int32)
+            gap = float(rng.exponential(spec.think_time_s)) if t else 0.0
+            reqs.append(Request(
+                rid=rid, prompt_len=transcript + ulen, max_new_tokens=out,
+                arrival=float(arrivals[i]), task_type=task,
+                slo_ttft=slo_ttft, slo_tpot=slo_tpot,
+                tokens=utter if t == 0 else None, cls=cls,
+                session_id=sid, turn=t, think_gap=gap, utterance=utter,
+                history_tokens=transcript))
+            transcript += ulen + out
+            rid += 1
+    return reqs
 
 
 def _generate_sessions(spec: WorkloadSpec, rng) -> List[Request]:
@@ -153,6 +360,8 @@ def _generate_sessions(spec: WorkloadSpec, rng) -> List[Request]:
 
 def generate(spec: WorkloadSpec) -> List[Request]:
     rng = np.random.default_rng(spec.seed)
+    if spec.class_mix:
+        return _generate_heterogeneous(spec, rng)
     if spec.sessions > 0:
         return _generate_sessions(spec, rng)
     n = spec.n_requests

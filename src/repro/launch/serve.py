@@ -40,7 +40,8 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core import (BucketServeScheduler, MemoryBudget, SchedulerConfig)
 from repro.core.engine import ServingEngine
 from repro.core.simulator import A100X4, CostModel, Simulator
-from repro.data.workload import WorkloadSpec, generate
+from repro.data.trace import TraceRecorder, TraceWorkload
+from repro.data.workload import DEFAULT_CLASS_MIX, WorkloadSpec, generate
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as tfm
 from repro.sharding import context as shctx
@@ -54,7 +55,21 @@ def _sched_config(args) -> SchedulerConfig:
         page_size=args.page_size)
 
 
-def _run_sim(cfg, args, reqs):
+def _tail_line(res) -> str:
+    """Percentile tails (overall + per class) — what the benchmark
+    gates read; means hide exactly the burst tail this PR is about."""
+    out = (f"tails: TTFT p50/p95/p99 {res.p50('ttft'):.3f}/"
+           f"{res.p95('ttft'):.3f}/{res.p99('ttft'):.3f} s, "
+           f"TPOT p50/p95/p99 {res.p50('tpot') * 1e3:.1f}/"
+           f"{res.p95('tpot') * 1e3:.1f}/{res.p99('tpot') * 1e3:.1f} ms, "
+           f"{res.incomplete()} incomplete")
+    for c in res.classes():
+        out += (f"; {c}: p99 TTFT {res.p99('ttft', c):.3f} s, "
+                f"SLO {res.slo_attainment(c):.2f}")
+    return out
+
+
+def _run_sim(cfg, args, reqs, recorder=None):
     """Cost-model pass over the identical workload (validation mode)."""
     hw = A100X4
     budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes,
@@ -69,7 +84,8 @@ def _run_sim(cfg, args, reqs):
                     session_ttl=args.session_ttl if args.sessions else None,
                     host_pool_tokens=args.host_pool_tokens,
                     spill_bw=args.spill_bw * 1e9,
-                    spill_dtype=args.spill_dtype)
+                    spill_dtype=args.spill_dtype,
+                    recorder=recorder)
     res = sim.run(reqs)
     prefix_info = ""
     if args.prefix_cache:
@@ -97,6 +113,20 @@ def _run_sim(cfg, args, reqs):
           f"peak pool {res.peak_pool}; preemptions {res.preempt_events}; "
           f"{prefix_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
+    print(f"[sim] {_tail_line(res)}")
+    return res
+
+
+def _finish_trace(args, recorder) -> None:
+    if recorder is None:
+        return
+    print("batch log:", recorder.batch_log)
+    if args.trace_record:
+        recorder.save(args.trace_record,
+                      meta={"arch": args.arch, "backend": args.backend,
+                            "burst_factor": args.burst_factor})
+        print(f"recorded {len(recorder.snapshots)} requests -> "
+              f"{args.trace_record}")
 
 
 def main():
@@ -162,6 +192,21 @@ def main():
                          "cache_len — the contiguous pool's budget — on "
                          "the jax backend; the cost model's HBM-derived "
                          "KV budget on --backend sim)")
+    ap.add_argument("--trace-record", default=None, metavar="PATH",
+                    help="record this run's request stream to a "
+                         "versioned JSONL trace (data/trace.py) that "
+                         "replays bit-identically through either "
+                         "backend")
+    ap.add_argument("--trace-replay", default=None, metavar="PATH",
+                    help="serve a recorded trace instead of generating "
+                         "a workload (arrival timestamps preserved; "
+                         "smoke clamps are NOT applied — the trace is "
+                         "authoritative)")
+    ap.add_argument("--burst-factor", type=float, default=1.0,
+                    help="> 1 switches to the heterogeneous trace "
+                         "family: chat/longctx/batch class mix with "
+                         "bursty diurnal arrivals peaking at this "
+                         "multiple of --rps")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--dataset", default="mixed")
     ap.add_argument("--rps", type=float, default=8.0)
@@ -193,7 +238,12 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only; serve prefill-only "
                          "workloads via max_new_tokens=1")
 
-    if args.sessions:
+    if args.trace_replay:
+        tw = TraceWorkload(args.trace_replay)
+        reqs = tw.requests()
+        print(f"replaying {len(reqs)} recorded requests from "
+              f"{args.trace_replay} (meta: {tw.meta})")
+    elif args.sessions:
         # multi-turn conversations: lengths are sized to FIT the
         # window up front (a later clamp would break the loop's
         # transcript composition, which must hit prompt_len exactly)
@@ -204,6 +254,21 @@ def main():
                             sessions=args.sessions, turns=args.turns,
                             utterance_tokens=per_turn, max_new_tokens=8)
         reqs = generate(spec)
+    elif args.burst_factor > 1.0:
+        # heterogeneous trace family: three-class mix under bursty
+        # diurnal arrivals (per-class SLOs ride on each request)
+        spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
+                            n_requests=args.requests,
+                            max_model_len=cfg.max_seq_len,
+                            prefix_groups=args.prefix_scenarios,
+                            prefix_tokens=args.prefix_tokens,
+                            vocab_size=cfg.vocab_size,
+                            class_mix=DEFAULT_CLASS_MIX,
+                            burst_factor=args.burst_factor)
+        reqs = generate(spec)
+        for r in reqs:   # keep CPU smoke runs short
+            r.max_new_tokens = min(r.max_new_tokens, 8)
+            r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
     else:
         spec = WorkloadSpec(dataset=args.dataset, rps=args.rps,
                             n_requests=args.requests,
@@ -216,8 +281,14 @@ def main():
             r.max_new_tokens = min(r.max_new_tokens, 8)
             r.prompt_len = min(r.prompt_len, cfg.max_seq_len - 16)
 
+    # the recorder doubles as the replay checker: both a recorded run
+    # and its replay print the formed-batch log, so CI can diff them
+    recorder = TraceRecorder() if (args.trace_record
+                                   or args.trace_replay) else None
+
     if args.backend == "sim":
-        _run_sim(cfg, args, reqs)
+        _run_sim(cfg, args, reqs, recorder)
+        _finish_trace(args, recorder)
         return
 
     mesh = None
@@ -246,7 +317,8 @@ def main():
                            else None,
                            host_pool_tokens=args.host_pool_tokens,
                            spill_bw=args.spill_bw * 1e9,
-                           spill_dtype=args.spill_dtype)
+                           spill_dtype=args.spill_dtype,
+                           recorder=recorder)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -288,6 +360,8 @@ def main():
           f"decode steps interleaved between prefill chunks: "
           f"{engine.interleaved_decode_steps}; {paged_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
+    print(_tail_line(engine.result))
+    _finish_trace(args, recorder)
 
 
 if __name__ == "__main__":

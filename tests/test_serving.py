@@ -339,3 +339,137 @@ class TestRequeueStats:
         assert len(done) == 8
         assert len(sched.monitor.seq_lens) == 8      # once per request
         assert sched.monitor.queue_len == 0
+
+
+# ------------------------------------------------- trace round trip ----
+from repro.data.trace import TraceRecorder, TraceWorkload     # noqa: E402
+from repro.data.workload import DEFAULT_CLASS_MIX             # noqa: E402
+
+
+class TestTraceRoundTrip:
+    """Satellite of PR 7, extending the parity suite: serve a
+    heterogeneous trace (class mix + shared prefixes + multi-turn
+    sessions) on the cost-model backend with the recorder attached,
+    then replay the written trace into BOTH backends.  The sim replay
+    must be fully bit-identical (formed-batch log, prompt token ids,
+    cache-hit counters, per-request timings); the engine replay must
+    make the SAME scheduling decisions (formed batches, prompt ids,
+    session/prefix hit counts) — i.e. the trace file carries enough to
+    reproduce a run on either substrate."""
+
+    SLOTS = 4
+    PAGE = 16
+
+    def _sched(self, cfg):
+        budget = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                              weight_bytes=0)
+        return _RecordingScheduler(cfg, budget, SchedulerConfig(
+            max_batch=self.SLOTS, memory_model="paged",
+            page_size=self.PAGE))
+
+    def _sim(self, cfg, recorder=None):
+        sched = self._sched(cfg)
+        sim = Simulator(sched, CostModel(cfg, A100X4), mode="disagg",
+                        decode_slot_cap=self.SLOTS, paged=True,
+                        page_size=self.PAGE,
+                        kv_pool_tokens=256 * self.PAGE,
+                        cache_len=cfg.max_seq_len, prefix_cache=True,
+                        session_ttl=1000.0, recorder=recorder)
+        return sched, sim
+
+    def _workload(self, cfg):
+        spec = WorkloadSpec(rps=1e6, n_requests=10, seed=23,
+                            max_model_len=cfg.max_seq_len,
+                            vocab_size=cfg.vocab_size,
+                            class_mix=DEFAULT_CLASS_MIX, burst_factor=4.0,
+                            prefix_groups=2, prefix_tokens=2 * self.PAGE,
+                            sessions=1, turns=2, think_time_s=0.0)
+        reqs = generate(spec)
+        for r in reqs:      # deep queue: identical first ticks on wall
+            r.arrival = 0.0  # and virtual clocks (cf. TestBackendParity)
+            # a turn unlocks at (previous turn's finish + think_gap) on
+            # the backend's OWN clock; a generous gap parks it after the
+            # initial queue drains on both the wall and virtual clocks,
+            # so its batch lands at the same point in both logs
+            r.think_gap = 8.0 if r.turn > 0 else 0.0
+            r.max_new_tokens = min(r.max_new_tokens, 4)
+            # moderate lengths: near-window prompts make slot-clamp
+            # requeues land at different (wall vs virtual) instants,
+            # which is engine-timing variance, not a trace property
+            if r.tokens is not None:
+                r.prompt_len = min(r.prompt_len, 120)
+                r.tokens = r.tokens[:r.prompt_len]
+            if r.utterance is not None:
+                r.utterance = r.utterance[:64]
+        # the max_new clamp shrinks each turn's generated span, so the
+        # precomputed transcript lengths of later turns must shrink too
+        by_turn = {(r.session_id, r.turn): r for r in reqs
+                   if r.session_id is not None}
+        for (sid, t), r in sorted(by_turn.items()):
+            if t == 0:
+                continue
+            prev = by_turn[(sid, t - 1)]
+            r.history_tokens = prev.prompt_len + prev.max_new_tokens
+            r.prompt_len = r.history_tokens + len(r.utterance)
+            assert r.prompt_len < cfg.max_seq_len
+        return reqs
+
+    @staticmethod
+    def _prompt_ids(res):
+        return {r.rid: (None if r.tokens is None else r.tokens.tobytes())
+                for r in res.requests if r.turn == 0}
+
+    @staticmethod
+    def _hits(res):
+        return (res.prefix_lookups, res.prefix_hits, res.prefix_hit_tokens,
+                res.session_lookups, res.session_hits,
+                res.session_hit_tokens)
+
+    def test_replay_into_both_backends(self, tmp_path):
+        # 512-token window: heterogeneous prompts leave room for the
+        # session transcripts to grow (and so be reused) across turns
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=512)
+        reqs = self._workload(cfg)
+        n = len(reqs)
+
+        # original run, recorder attached
+        rec = TraceRecorder()
+        sched0, sim0 = self._sim(cfg, recorder=rec)
+        res0 = sim0.run(reqs)
+        assert len(res0.finished()) == n
+        assert res0.prefix_hits > 0 and res0.session_hits > 0
+        path = str(tmp_path / "round.jsonl")
+        rec.save(path)
+
+        # replay -> cost-model backend: full bit-identity
+        tw = TraceWorkload(path)
+        assert len(tw) == n
+        rec1 = TraceRecorder()
+        sched1, sim1 = self._sim(cfg, recorder=rec1)
+        res1 = sim1.run(tw.requests())
+        assert rec1.batch_log == rec.batch_log
+        assert sched1.formed == sched0.formed
+        assert self._prompt_ids(res1) == self._prompt_ids(res0)
+        assert self._hits(res1) == self._hits(res0)
+        assert sorted((r.rid, r.finished, r.first_token, r.generated)
+                      for r in res1.requests) == \
+               sorted((r.rid, r.finished, r.first_token, r.generated)
+                      for r in res0.requests)
+
+        # replay -> jax engine backend: same scheduling decisions
+        sched2 = self._sched(cfg)
+        params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+        # the fused engine shares its slots between prefill admission
+        # and live decodes; 3x the prefill batch cap keeps its slot
+        # clamp from firing (the disagg sim gives prefill its own 4)
+        eng = ServingEngine(cfg, params, sched2,
+                            max_slots=3 * self.SLOTS,
+                            cache_len=cfg.max_seq_len, paged=True,
+                            page_size=self.PAGE,
+                            kv_pool_tokens=256 * self.PAGE,
+                            prefix_cache=True, session_ttl=1000.0)
+        eng.submit(tw.requests())
+        assert len(eng.run(max_wall_s=300)) == n
+        assert sched2.formed == sched0.formed
+        assert self._prompt_ids(eng.result) == self._prompt_ids(res0)
+        assert self._hits(eng.result) == self._hits(res0)

@@ -1,0 +1,311 @@
+"""Trace schema, burst generator, and tail-percentile properties.
+
+Plain seeded-rng randomization (no hypothesis dependency — the PR 5
+container note): each property loops over a spread of generated cases,
+so failures reproduce exactly from the printed seed.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.request import Request, TaskType
+from repro.core.serving_loop import ServeResult
+from repro.data import trace as tr
+from repro.data.workload import (CLASS_SLOS, DEFAULT_CLASS_MIX,
+                                 WorkloadSpec, envelope_fn, generate)
+
+
+def _result(requests):
+    return ServeResult(requests=requests, makespan=1.0, busy_prefill=0.0,
+                       busy_decode=0.0, useful_flops=0.0, padded_flops=0.0,
+                       oom_events=0, bucketing_overhead_s=0.0)
+
+
+def _random_requests(rng, n):
+    """A randomized but trace-legal stream: odd class tags, zero-output
+    requests, sessions, sparse tokens — sorted by arrival."""
+    arrivals = np.sort(rng.uniform(0.0, 50.0, n))
+    reqs = []
+    for i in range(n):
+        cls = rng.choice(["chat", "longctx", "batch", ""])
+        has_tokens = rng.random() < 0.5
+        plen = int(rng.integers(1, 300))
+        r = Request(
+            rid=i, prompt_len=plen,
+            max_new_tokens=int(rng.integers(0, 64)),  # zero-output legal
+            arrival=float(arrivals[i]),
+            task_type=TaskType.OFFLINE if cls == "batch"
+            else TaskType.ONLINE,
+            slo_ttft=float(rng.uniform(0.1, 100.0)),
+            slo_tpot=float(rng.uniform(0.01, 5.0)),
+            tokens=(rng.integers(0, 32000, plen).astype(np.int32)
+                    if has_tokens else None),
+            cls=str(cls))
+        if rng.random() < 0.2:
+            r.session_id = int(rng.integers(0, 5))
+            r.turn = int(rng.integers(0, 4))
+            r.think_gap = float(rng.uniform(0.0, 3.0))
+            ul = int(rng.integers(1, 50))
+            r.utterance = rng.integers(0, 32000, ul).astype(np.int32)
+            if r.turn > 0:
+                r.tokens = None
+                r.history_tokens = int(rng.integers(0, 200))
+        reqs.append(r)
+    return reqs
+
+
+def _key(r: Request):
+    return (r.rid, r.prompt_len, r.max_new_tokens, r.arrival,
+            r.task_type, r.slo_ttft, r.slo_tpot, r.cls, r.session_id,
+            r.turn, r.think_gap, r.history_tokens,
+            None if r.tokens is None else r.tokens.tobytes(),
+            None if r.utterance is None else r.utterance.tobytes())
+
+
+class TestTraceRoundTrip:
+    def test_serialize_parse_identity_randomized(self, tmp_path):
+        for seed in range(8):
+            rng = np.random.default_rng(seed)
+            reqs = _random_requests(rng, int(rng.integers(1, 60)))
+            p = str(tmp_path / f"t{seed}.jsonl")
+            tr.write_trace(p, reqs, meta={"seed": seed})
+            header, back = tr.read_trace(p)
+            assert header["meta"] == {"seed": seed}, f"seed {seed}"
+            assert [_key(r) for r in back] == [_key(r) for r in reqs], \
+                f"seed {seed}"
+            # float arrivals and SLOs survive EXACTLY (json repr
+            # round-trip), not approximately — replay depends on it
+            assert [r.arrival for r in back] == [r.arrival for r in reqs]
+
+    def test_token_dtype_restored(self, tmp_path):
+        r = Request(rid=0, prompt_len=4, max_new_tokens=2, arrival=0.0,
+                    tokens=np.array([1, 2, 3, 4], np.int32))
+        p = str(tmp_path / "t.jsonl")
+        tr.write_trace(p, [r])
+        _, back = tr.read_trace(p)
+        assert back[0].tokens.dtype == np.int32
+
+    def test_workload_roundtrip_preserves_class_slos(self, tmp_path):
+        """Satellite: per-class SLO budgets ride ON the request through
+        record -> replay (the future SLO scheduler reads them there)."""
+        spec = WorkloadSpec(n_requests=50, rps=10.0, seed=3,
+                            class_mix=DEFAULT_CLASS_MIX, burst_factor=3.0,
+                            max_model_len=4096)
+        reqs = generate(spec)
+        assert {r.cls for r in reqs} <= set(CLASS_SLOS)
+        for r in reqs:
+            assert (r.slo_ttft, r.slo_tpot) == CLASS_SLOS[r.cls]
+        p = str(tmp_path / "w.jsonl")
+        tr.write_trace(p, reqs)
+        _, back = tr.read_trace(p)
+        for r in back:
+            assert (r.slo_ttft, r.slo_tpot) == CLASS_SLOS[r.cls]
+        assert [r.cls for r in back] == [r.cls for r in reqs]
+
+
+class TestTraceRejection:
+    def test_out_of_order_write_rejected(self, tmp_path):
+        a = Request(rid=0, prompt_len=4, max_new_tokens=1, arrival=5.0)
+        b = Request(rid=1, prompt_len=4, max_new_tokens=1, arrival=1.0)
+        with pytest.raises(tr.TraceError, match="out-of-order"):
+            tr.write_trace(str(tmp_path / "x.jsonl"), [a, b])
+
+    def test_out_of_order_read_rejected(self, tmp_path):
+        p = str(tmp_path / "x.jsonl")
+        recs = [tr.request_to_record(Request(
+            rid=i, prompt_len=4, max_new_tokens=1, arrival=t))
+            for i, t in ((0, 5.0), (1, 1.0))]
+        with open(p, "w") as f:
+            f.write(json.dumps({"schema": tr.TRACE_SCHEMA,
+                                "version": tr.TRACE_VERSION, "n": 2,
+                                "meta": {}}) + "\n")
+            for rec in recs:
+                f.write(json.dumps(rec) + "\n")
+        with pytest.raises(tr.TraceError, match="out-of-order"):
+            tr.read_trace(p)
+
+    def test_truncated_trace_fails_loudly(self, tmp_path):
+        reqs = _random_requests(np.random.default_rng(0), 10)
+        p = str(tmp_path / "t.jsonl")
+        tr.write_trace(p, reqs)
+        lines = open(p).read().splitlines()
+        q = str(tmp_path / "cut.jsonl")
+        with open(q, "w") as f:
+            f.write("\n".join(lines[:6]) + "\n")
+        with pytest.raises(tr.TraceError, match="truncated"):
+            tr.read_trace(q)
+
+    def test_corrupt_json_reports_line(self, tmp_path):
+        reqs = _random_requests(np.random.default_rng(1), 5)
+        p = str(tmp_path / "t.jsonl")
+        tr.write_trace(p, reqs)
+        lines = open(p).read().splitlines()
+        lines[3] = lines[3][: len(lines[3]) // 2]     # chop mid-object
+        with open(p, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        with pytest.raises(tr.TraceError, match=":4:"):
+            tr.read_trace(p)
+
+    def test_version_mismatch_is_versioned_error(self, tmp_path):
+        reqs = _random_requests(np.random.default_rng(2), 3)
+        p = str(tmp_path / "t.jsonl")
+        tr.write_trace(p, reqs)
+        lines = open(p).read().splitlines()
+        hdr = json.loads(lines[0])
+        hdr["version"] = tr.TRACE_VERSION + 1
+        lines[0] = json.dumps(hdr)
+        with open(p, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        with pytest.raises(tr.TraceError, match="version"):
+            tr.read_trace(p)
+
+    def test_wrong_schema_rejected(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        with open(p, "w") as f:
+            f.write(json.dumps({"schema": "other.trace", "version": 1,
+                                "n": 0, "meta": {}}) + "\n")
+        with pytest.raises(tr.TraceError, match="schema"):
+            tr.read_trace(p)
+
+    def test_empty_file_rejected(self, tmp_path):
+        p = str(tmp_path / "t.jsonl")
+        open(p, "w").close()
+        with pytest.raises(tr.TraceError, match="empty"):
+            tr.read_trace(p)
+
+
+class TestBurstGenerator:
+    def test_empirical_rate_tracks_envelope(self):
+        """Thinning correctness: binned arrival counts stay within
+        tolerance of the integrated lambda(t) envelope."""
+        spec = WorkloadSpec(n_requests=4000, rps=40.0, seed=11,
+                            class_mix=(("chat", 1.0),),
+                            burst_factor=4.0, diurnal_period_s=20.0,
+                            burst_every_s=8.0, burst_duration_s=2.0,
+                            max_model_len=2048)
+        reqs = generate(spec)
+        arr = np.array([r.arrival for r in reqs])
+        lam = envelope_fn(spec)
+        bin_w = 2.0
+        edges = np.arange(0.0, arr.max() + bin_w, bin_w)
+        counts, _ = np.histogram(arr, bins=edges)
+        # integrate lambda over each bin (fine quadrature)
+        expected = []
+        for lo in edges[:-1]:
+            ts = np.linspace(lo, lo + bin_w, 41)
+            expected.append(float(np.trapezoid([lam(t) for t in ts], ts)))
+        expected = np.array(expected)
+        # drop the final partial bin (sampler stops mid-bin at n)
+        counts, expected = counts[:-1], expected[:-1]
+        err = np.abs(counts - expected) / np.maximum(expected, 1.0)
+        assert err.mean() < 0.25, err.mean()
+        # the burst actually bursts: peak bin >= 2x the steady rate
+        assert counts.max() >= 2.0 * spec.rps * bin_w
+
+    def test_rate_envelope_bounds(self):
+        spec = WorkloadSpec(rps=10.0, burst_factor=4.0, seed=0,
+                            diurnal_period_s=30.0)
+        lam = envelope_fn(spec)
+        for t in np.linspace(0, 200, 500):
+            assert spec.rps - 1e-9 <= lam(t) <= 4.0 * spec.rps + 1e-9
+
+    def test_seed_stability(self):
+        """PR 4 pattern: the same spec regenerates a bit-identical
+        stream — across calls, and stable against burst-knob toggles
+        only through the dedicated sub-rng (not asserted here)."""
+        spec = WorkloadSpec(n_requests=120, rps=8.0, seed=42,
+                            class_mix=DEFAULT_CLASS_MIX, burst_factor=4.0,
+                            max_model_len=4096, prefix_groups=3,
+                            sessions=2, turns=2)
+        a, b = generate(spec), generate(spec)
+        assert [_key(r) for r in a] == [_key(r) for r in b]
+
+    def test_classes_and_offline_tag(self):
+        spec = WorkloadSpec(n_requests=300, rps=8.0, seed=1,
+                            class_mix=DEFAULT_CLASS_MIX, burst_factor=2.0,
+                            max_model_len=4096)
+        reqs = generate(spec)
+        seen = {r.cls for r in reqs}
+        assert seen == {"chat", "longctx", "batch"}
+        for r in reqs:
+            assert (r.task_type == TaskType.OFFLINE) == (r.cls == "batch")
+            assert r.prompt_len + r.max_new_tokens <= 4096
+
+
+def _req(cls, ttft=None, tpot_span=None, gen=1, slo=(1e9, 1e9)):
+    """Hand-built request: ttft None = never produced a first token."""
+    r = Request(rid=0, prompt_len=8, max_new_tokens=max(gen, 1),
+                arrival=0.0, slo_ttft=slo[0], slo_tpot=slo[1], cls=cls)
+    if ttft is not None:
+        r.first_token = ttft
+        r.generated = gen
+        if tpot_span is not None:
+            r.finished = ttft + tpot_span
+    else:
+        r.dropped = True
+    return r
+
+
+class TestPercentiles:
+    def test_nearest_rank_with_ties(self):
+        # series [1,1,1,2,10]: p50 -> ceil(.5*5)=3rd = 1; p99 -> 5th = 10
+        reqs = [_req("chat", ttft=v) for v in (1.0, 1.0, 1.0, 2.0, 10.0)]
+        res = _result(reqs)
+        assert res.p50("ttft") == 1.0
+        assert res.p95("ttft") == 10.0
+        assert res.p99("ttft") == 10.0
+
+    def test_single_sample_class(self):
+        res = _result([_req("longctx", ttft=7.0)])
+        for q in (res.p50, res.p95, res.p99):
+            assert q("ttft", "longctx") == 7.0
+        assert math.isnan(res.p99("ttft", "chat"))
+
+    def test_dropped_excluded_from_ttft_counted_incomplete(self):
+        reqs = [_req("chat", ttft=1.0), _req("chat", ttft=None),
+                _req("batch", ttft=None)]
+        res = _result(reqs)
+        assert res.ttft_series() == [1.0]
+        assert res.incomplete() == 2
+        assert res.incomplete("chat") == 1
+        assert res.incomplete("batch") == 1
+
+    def test_tpot_needs_two_tokens(self):
+        done = _req("chat", ttft=1.0, tpot_span=3.0, gen=4)   # tpot = 1.0
+        one = _req("chat", ttft=1.0, tpot_span=0.0, gen=1)    # no interval
+        res = _result([done, one])
+        assert res.tpot_series() == [1.0]
+        assert res.p99("tpot") == 1.0
+
+    def test_per_class_series_partition_overall(self):
+        """Regression: per-class TTFT/TPOT series are a PARTITION of
+        the overall series (nothing dropped, nothing double-counted)."""
+        rng = np.random.default_rng(9)
+        reqs = []
+        for i in range(200):
+            cls = ["chat", "longctx", "batch"][int(rng.integers(3))]
+            if rng.random() < 0.1:
+                reqs.append(_req(cls, ttft=None))
+            else:
+                reqs.append(_req(cls, ttft=float(rng.uniform(0.1, 20)),
+                                 tpot_span=float(rng.uniform(0.1, 5)),
+                                 gen=int(rng.integers(2, 50))))
+        res = _result(reqs)
+        for series in (res.ttft_series, res.tpot_series):
+            per_cls = sorted(x for c in res.classes()
+                             for x in series(c))
+            assert per_cls == sorted(series())
+        assert sum(res.incomplete(c) for c in res.classes()) == \
+            res.incomplete()
+
+    def test_slo_attainment_per_class(self):
+        ok = _req("chat", ttft=0.5, tpot_span=1.0, gen=11,
+                  slo=(1.0, 0.2))                     # tpot 0.1 <= 0.2
+        bad = _req("batch", ttft=50.0, tpot_span=1.0, gen=11,
+                   slo=(1.0, 0.2))                    # ttft 50 > 1
+        res = _result([ok, bad])
+        assert res.slo_attainment("chat") == 1.0
+        assert res.slo_attainment("batch") == 0.0
+        assert res.slo_attainment() == 0.5
