@@ -44,8 +44,30 @@ def online_spec(dataset: str, rps: float, n: int = 200) -> WorkloadSpec:
                         task_type=TaskType.ONLINE)
 
 
+# ---- machine-readable artifact capture (PR 8) -------------------------
+# ``emit`` records every CSV block it prints so benchmarks/run.py can
+# persist a BENCH_<table>.json artifact per table — the bench
+# trajectory is otherwise write-only stdout.
+_captured = []
+
+
+def reset_capture() -> None:
+    _captured.clear()
+
+
+def captured():
+    return list(_captured)
+
+
+def _json_cell(x):
+    return x if isinstance(x, (bool, int, float, str)) or x is None \
+        else str(x)
+
+
 def emit(rows, header):
     print(",".join(header))
     for r in rows:
         print(",".join(str(x) for x in r))
     print()
+    _captured.append({"header": [str(h) for h in header],
+                      "rows": [[_json_cell(x) for x in r] for r in rows]})

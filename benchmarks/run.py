@@ -7,14 +7,23 @@ Prints CSV blocks (``table,...`` rows) plus derived paper-claim ratios.
 ``--quick`` runs every table at reduced load (CI smoke: exercises the
 full scheduler/loop stack in a couple of minutes so the perf scripts
 can't silently rot; the printed ratios are NOT paper-comparable).
+
+Each table ALSO persists a machine-readable ``BENCH_<table>.json``
+artifact (``--out-dir``, default cwd): every CSV block it printed, the
+gate verdict (a table FAILS by raising — usually an AssertionError from
+one of its paper-claim gates), wall time, git sha, and run config —
+``--quick`` emits them too, so CI uploads a comparable trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
-from . import (arch_sweep, fig5_capacity, fig5_offline, fig5_slo,
+from . import (arch_sweep, common, fig5_capacity, fig5_offline, fig5_slo,
                fig6_overhead, kv_quant, kv_spill, prefix_cache, roofline,
                session_reuse, trace_replay, waste_model)
 
@@ -34,25 +43,49 @@ TABLES = {
 }
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="reduced-load smoke pass (CI)")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<table>.json artifacts")
     args = ap.parse_args()
     only = [s for s in args.only.split(",") if s]
+    sha = _git_sha()
     failed = []
     for name, fn in TABLES.items():
         if only and name not in only:
             continue
         t0 = time.time()
         print(f"### {name}")
+        common.reset_capture()
+        err = None
         try:
             fn(quick=args.quick)
         except Exception as e:  # keep the harness running
             failed.append(name)
-            print(f"{name},ERROR,{type(e).__name__}: {e}")
-        print(f"### {name} done in {time.time() - t0:.1f}s\n", flush=True)
+            err = f"{type(e).__name__}: {e}"
+            print(f"{name},ERROR,{err}")
+        wall = time.time() - t0
+        art = {"table": name, "passed": err is None, "error": err,
+               "git_sha": sha, "wall_s": round(wall, 3),
+               "config": {"quick": args.quick, "argv": sys.argv[1:]},
+               "tables": common.captured()}
+        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+        print(f"### {name} done in {wall:.1f}s -> {path}\n", flush=True)
     if failed:
         sys.exit(f"benchmarks failed: {', '.join(failed)}")
 

@@ -61,6 +61,23 @@ class FormedBatch:
     def padded_tokens(self) -> int:
         return self.pad_to * len(self.requests)
 
+    # ---- per-batch waste gauges (core/telemetry.py timeline args) ----
+    @property
+    def padding_fraction(self) -> float:
+        """Fraction of the padded prefill compute that is pure padding
+        — Eq. (1)'s overhead MEASURED per dispatched batch."""
+        padded = self.padded_tokens
+        return 1.0 - self.total_tokens / padded if padded else 0.0
+
+    @property
+    def homogeneity(self) -> float:
+        """min/max prompt length across rows: 1.0 = perfectly uniform
+        batch (the bucket did its job), ->0 = pathological mixing."""
+        if not self.requests:
+            return 1.0
+        lens = [r.prompt_len for r in self.requests]
+        return min(lens) / max(max(lens), 1)
+
 
 class DynamicBatchController:
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget,

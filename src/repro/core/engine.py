@@ -801,7 +801,7 @@ class ServingEngine:
                  host_pool_tokens: Optional[int] = None,
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
-                 recorder=None):
+                 recorder=None, tracer=None):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -813,7 +813,8 @@ class ServingEngine:
             session_ttl=session_ttl, host_pool_tokens=host_pool_tokens,
             spill_bw=spill_bw, spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
-            mode="disagg", decode_slot_cap=max_slots), recorder=recorder)
+            mode="disagg", decode_slot_cap=max_slots), recorder=recorder,
+            tracer=tracer)
         self.result: Optional[ServeResult] = None
 
     @property

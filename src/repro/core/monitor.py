@@ -10,6 +10,8 @@ import collections
 import dataclasses
 from typing import Deque, Dict, List
 
+from .telemetry import blame_means
+
 
 @dataclasses.dataclass
 class Snapshot:
@@ -29,11 +31,18 @@ class Snapshot:
     restored_pages: int = 0
     # live tail-latency state (PR 7): nearest-rank percentiles over the
     # rolling TTFT/TPOT sample windows — what an SLO-aware scheduler
-    # steers on (a mean hides exactly the tail it must protect)
+    # steers on (a mean hides exactly the tail it must protect).  p95
+    # included because the SLO gates read p95 (PR 8).
     ttft_p50: float = 0.0
     ttft_p99: float = 0.0
     tpot_p50: float = 0.0
     tpot_p99: float = 0.0
+    ttft_p95: float = 0.0
+    tpot_p95: float = 0.0
+    # mean seconds per ledger phase over the rolling retirement window
+    # (core/telemetry.py blame_means — the ONE aggregation rule shared
+    # with ServeResult.blame)
+    blame: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def _nearest_rank(xs, q: float) -> float:
@@ -57,6 +66,10 @@ class GlobalMonitor:
         # at first-token / retirement time
         self.ttft_samples: Deque[float] = collections.deque(maxlen=512)
         self.tpot_samples: Deque[float] = collections.deque(maxlen=512)
+        # rolling per-class latency-blame samples (PR 8): closed ledger
+        # phase dicts keyed by request class ('' = untagged)
+        self.blame_samples: Dict[str, Deque[Dict[str, float]]] = \
+            collections.defaultdict(lambda: collections.deque(maxlen=512))
         self.history: List[Snapshot] = []
         self.in_flight_tokens = 0
         self.decode_pool = 0
@@ -88,8 +101,7 @@ class GlobalMonitor:
     # ------------------------------------------------------------ events --
     def on_arrival(self, t: float, seq_len: int) -> None:
         self.arrivals.append(t)
-        while self.arrivals and self.arrivals[0] < t - self.window_s:
-            self.arrivals.popleft()
+        self._prune_arrivals(t)
         self.seq_lens.append(seq_len)
         self.queue_len += 1
 
@@ -110,6 +122,11 @@ class GlobalMonitor:
     def on_tpot(self, tpot_s: float, cls: str = "") -> None:
         """A request finished with a per-output-token latency sample."""
         self.tpot_samples.append(tpot_s)
+
+    def on_retire(self, cls: str, phases: Dict[str, float]) -> None:
+        """A request retired with a closed latency ledger: keep its
+        phase breakdown in the rolling per-class blame window."""
+        self.blame_samples[cls].append(dict(phases))
 
     def on_prefix_lookup(self, hit_tokens: int, page_size: int) -> None:
         """One admitted request matched against the prefix cache:
@@ -146,6 +163,13 @@ class GlobalMonitor:
         self.restore_backlog_bytes = backlog_bytes
 
     # ------------------------------------------------------------- stats --
+    def _prune_arrivals(self, t: float) -> None:
+        """Drop arrival stamps older than the window.  Called on BOTH
+        arrival and snapshot — an idle tail with no arrivals must decay
+        to rate 0, not keep reporting the last burst forever."""
+        while self.arrivals and self.arrivals[0] < t - self.window_s:
+            self.arrivals.popleft()
+
     def arrival_rate(self) -> float:
         if len(self.arrivals) < 2:
             return 0.0
@@ -174,7 +198,14 @@ class GlobalMonitor:
     def tpot_percentile(self, q: float) -> float:
         return _nearest_rank(self.tpot_samples, q)
 
+    def blame(self, cls: str = "") -> Dict[str, float]:
+        """Mean seconds per phase over the rolling window for one
+        request class (all classes pooled when every sample is '')."""
+        return blame_means(list(self.blame_samples.get(cls, ())))
+
     def snapshot(self, t: float) -> Snapshot:
+        self._prune_arrivals(t)     # idle tail: rate decays without events
+        pooled = [s for dq in self.blame_samples.values() for s in dq]
         s = Snapshot(t, self.queue_len, self.decode_pool,
                      self.in_flight_tokens, self.arrival_rate(),
                      self.mean_seq_len(), self.n_buckets, self.kv_util(),
@@ -182,6 +213,9 @@ class GlobalMonitor:
                      self.session_hits, self.session_hit_tokens,
                      self.spilled_pages, self.restored_pages,
                      self.ttft_percentile(50), self.ttft_percentile(99),
-                     self.tpot_percentile(50), self.tpot_percentile(99))
+                     self.tpot_percentile(50), self.tpot_percentile(99),
+                     ttft_p95=self.ttft_percentile(95),
+                     tpot_p95=self.tpot_percentile(95),
+                     blame=blame_means(pooled))
         self.history.append(s)
         return s

@@ -7,6 +7,8 @@ from typing import Optional
 
 import numpy as np
 
+from .telemetry import LatencyLedger
+
 
 class TaskType(enum.Enum):
     ONLINE = "online"     # latency-sensitive, SLO-bound
@@ -64,6 +66,13 @@ class Request:
     # padded prompt tokens this request actually ran through the
     # prefill executor (accumulates across preemption restarts)
     prefilled_tokens: int = 0
+    # per-request phase attribution (core/telemetry.py): the ServingLoop
+    # installs a fresh ledger at run start and stamps every transition;
+    # phase durations sum to (retirement - first arrival) — the
+    # conservation invariant the observability tests assert.  ``arrival``
+    # above is OVERWRITTEN on requeue/preempt; the ledger's ``t0`` keeps
+    # the original.
+    ledger: Optional[LatencyLedger] = None
     prefill_start: float = -1.0
     first_token: float = -1.0
     finished: float = -1.0

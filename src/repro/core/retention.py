@@ -68,6 +68,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .prefix_cache import PrefixCache
+from .telemetry import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -140,6 +141,9 @@ class KvRetention:
         self.spill_page_bytes = spill_page_bytes
         self.prefix = PrefixCache(page_size)
         self.prefix.on_host_drop = self._on_host_drop
+        # event-timeline seam (core/telemetry.py): the ServingLoop
+        # overwrites this after backend.begin when tracing is on
+        self.tracer = NULL_TRACER
         self.sessions: Dict[int, _Session] = {}
         self.stats = RetentionStats()
         self._now = 0.0
@@ -449,9 +453,14 @@ class KvRetention:
             protect.append(e.tail_page)
         if new:
             # one PCIe channel: this run queues behind in-flight copies
-            done = max(self._now, self._restore_free) \
-                + new * self.spill_seconds_per_page
+            ch_start = max(self._now, self._restore_free)
+            done = ch_start + new * self.spill_seconds_per_page
             self._restore_free = done
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "restore-channel", f"restore x{new}", ch_start,
+                    new * self.spill_seconds_per_page, cat="restore",
+                    args={"pages": new, "rid": req.rid})
             self.stats.restore_seconds += new * self.spill_seconds_per_page
             for hslot, kind, obj in self._restores[-new:]:
                 if kind == "node":
@@ -547,6 +556,10 @@ class KvRetention:
         if freed < need:
             freed += self._reclaim_sessions(alloc, need - freed, protect,
                                             expired_only=False)
+        if self.tracer.enabled:
+            self.tracer.instant("retention", "evict-walk", self._now,
+                                cat="evict",
+                                args={"need": need, "freed": freed})
         return freed
 
     def evict_one(self, alloc, protect=()) -> bool:
@@ -614,6 +627,10 @@ class KvRetention:
         self.stats.pages_spilled += 1
         self.stats.spill_seconds += self.spill_seconds_per_page
         self.stats.bytes_spilled += self.spill_page_bytes
+        if self.tracer.enabled:
+            self.tracer.complete("spill-channel", "spill", self._now,
+                                 self.spill_seconds_per_page, cat="spill",
+                                 args={"hslot": h, "kind": "prefix"})
         return True
 
     def _spill_tail(self, alloc, e: _Session) -> bool:
@@ -633,6 +650,10 @@ class KvRetention:
         self.stats.pages_spilled += 1
         self.stats.spill_seconds += self.spill_seconds_per_page
         self.stats.bytes_spilled += self.spill_page_bytes
+        if self.tracer.enabled:
+            self.tracer.complete("spill-channel", "spill", self._now,
+                                 self.spill_seconds_per_page, cat="spill",
+                                 args={"hslot": h, "kind": "tail"})
         return True
 
     def _host_slot_for(self, alloc, stamp: int) -> bool:

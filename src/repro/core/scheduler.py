@@ -24,6 +24,7 @@ from .batcher import DynamicBatchController, FormedBatch, MemoryBudget
 from .bucket import Bucket, BucketManager
 from .monitor import GlobalMonitor
 from .request import Request, TaskType
+from .telemetry import NULL_TRACER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,10 @@ class SchedulerBase:
             decode_reserve=decode_reserve, page_size=page_size)
         self.monitor = GlobalMonitor()
         self.monitor.kv_budget_tokens = self.batcher.token_budget()
+        # event-timeline seam (core/telemetry.py): the ServingLoop
+        # overwrites this with its live Tracer when tracing is on
+        self.tracer = NULL_TRACER
+        self._last_n_max = -1
 
     # ------------------------------------------------------------ events --
     def _enqueue(self, req: Request) -> None:
@@ -184,6 +189,10 @@ class BucketServeScheduler(SchedulerBase):
     def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
         """One scheduling tick: Algorithm 1 adjust + batch formation."""
         n_max = self._n_max()
+        if self.tracer.enabled and n_max != self._last_n_max:
+            self.tracer.counter("controller", "n_max", now,
+                                {"n_max": n_max})
+            self._last_n_max = n_max
         self.buckets.adjust(n_max)
         self.monitor.n_buckets = len(self.buckets.buckets)
         b = self._pick_bucket()

@@ -47,7 +47,10 @@ from typing import (Dict, List, Optional, Protocol, Sequence, Tuple,
 import numpy as np
 
 from .batcher import FormedBatch
+from .monitor import _nearest_rank
 from .request import Request
+from .telemetry import (NULL_TRACER, WAIT_PHASES, LatencyLedger,
+                        blame_means)
 
 
 # -------------------------------------------------------------- clocks ----
@@ -268,6 +271,16 @@ class ServeResult:
     restore_time_total: float = 0.0      # priced host->device transfer s
     spilled_bytes: int = 0               # COMPRESSED bytes moved dev->host
     restored_bytes: int = 0              # COMPRESSED bytes moved host->dev
+    # ---- observability gauges (core/telemetry.py, PR 8) ----
+    # time-weighted mean KV-pool occupancy over the run (paged: used
+    # pages / pool pages; token-budget: live tokens / budget; slot
+    # engine: occupied slots / slots)
+    kv_util_time_weighted: float = 0.0
+    # per dispatched prefill batch, in dispatch order: measured Eq.-(1)
+    # padding waste and min/max-length homogeneity
+    batch_padding_fractions: List[float] = dataclasses.field(
+        default_factory=list)
+    batch_homogeneity: List[float] = dataclasses.field(default_factory=list)
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -303,12 +316,14 @@ class ServeResult:
     def percentile(self, q: float, metric: str = "ttft",
                    cls: Optional[str] = None) -> float:
         assert metric in ("ttft", "tpot"), metric
-        xs = sorted(self.ttft_series(cls) if metric == "ttft"
-                    else self.tpot_series(cls))
+        xs = self.ttft_series(cls) if metric == "ttft" \
+            else self.tpot_series(cls)
         if not xs:
             return float("nan")
-        rank = max(int(math.ceil(q / 100.0 * len(xs))), 1)
-        return xs[rank - 1]
+        # the SAME nearest-rank rule GlobalMonitor snapshots use
+        # (monitor._nearest_rank) — live and post-run percentile
+        # definitions cannot diverge
+        return _nearest_rank(xs, q)
 
     def p50(self, metric: str = "ttft", cls: Optional[str] = None) -> float:
         return self.percentile(50.0, metric, cls)
@@ -355,6 +370,47 @@ class ServeResult:
     def padding_efficiency(self) -> float:
         return self.useful_flops / max(self.padded_flops, 1e-9)
 
+    # ---- latency blame (core/telemetry.py ledgers, PR 8) -------------
+    def padding_waste_ratio(self) -> float:
+        """Mean measured per-batch padding fraction (Eq. 1's overhead,
+        observed at dispatch rather than modeled)."""
+        fr = self.batch_padding_fractions
+        return sum(fr) / len(fr) if fr else 0.0
+
+    def blame(self, cls: Optional[str] = None) -> Dict[str, float]:
+        """Mean end-to-end phase breakdown (seconds per request) over
+        retired requests — where a request's lifetime actually went."""
+        return blame_means(
+            [r.ledger.phases for r in self.requests
+             if r.ledger is not None and r.ledger.closed
+             and (cls is None or r.cls == cls)])
+
+    def ttft_blame(self, cls: Optional[str] = None,
+                   tail_q: Optional[float] = None) -> Dict[str, float]:
+        """Mean phase breakdown of the time UP TO first token, over
+        requests that produced one; ``tail_q`` restricts to the TTFT
+        tail at/above that percentile (e.g. 99 -> the P99 convoy)."""
+        reqs = [r for r in self.requests
+                if r.first_token >= 0 and r.ledger is not None
+                and r.ledger.ttft_phases is not None
+                and (cls is None or r.cls == cls)]
+        if tail_q is not None and reqs:
+            thresh = self.percentile(tail_q, "ttft", cls)
+            reqs = [r for r in reqs if r.ttft() >= thresh]
+        return blame_means([r.ledger.ttft_phases for r in reqs])
+
+    def ttft_wait_share(self, cls: Optional[str] = None,
+                        tail_q: Optional[float] = None) -> float:
+        """Fraction of (tail) TTFT spent WAITING (queue / clamp /
+        requeue / restore hold) vs compute+transfer — the one number
+        the burst-tail blame gate reads: static batching's P99 TTFT is
+        queue-dominated, BucketServe's is not."""
+        b = self.ttft_blame(cls, tail_q)
+        tot = sum(b.values())
+        if tot <= 0.0:
+            return 0.0
+        return sum(b.get(p, 0.0) for p in WAIT_PHASES) / tot
+
     def busy_utilization(self, n_executors: int = 2) -> float:
         """Fraction of executor-time busy — the closest analogue of the
         paper's 'average GPU utilization' (Fig. 5b)."""
@@ -380,6 +436,12 @@ class _LoopState:
     preempts: int = 0
     prefill_tok: int = 0
     prefill_skip: int = 0
+    # time-weighted KV occupancy integral (level x dt, advanced once
+    # per loop iteration in _maintain) and per-batch waste gauges
+    util_acc: float = 0.0
+    util_t: float = 0.0
+    pad_fracs: List[float] = dataclasses.field(default_factory=list)
+    homog: List[float] = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------------- config --
@@ -396,7 +458,8 @@ class ServingLoop:
     """Drives a scheduler policy against an :class:`ExecutionBackend`."""
 
     def __init__(self, scheduler, backend: ExecutionBackend,
-                 config: LoopConfig = LoopConfig(), recorder=None):
+                 config: LoopConfig = LoopConfig(), recorder=None,
+                 tracer=None):
         assert config.mode in ("disagg", "coupled", "static"), config.mode
         self.sched = scheduler
         self.backend = backend
@@ -405,6 +468,10 @@ class ServingLoop:
         # snapshots after backend.begin + the run's dispatch/requeue/
         # turn event log (the replay bit-identity surface)
         self.recorder = recorder
+        # optional event timeline (core/telemetry.py).  Call sites guard
+        # on tracer.enabled before building any event argument — the
+        # disabled default costs no allocations on the hot path.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # ------------------------------------------------------------- run ----
     def run(self, requests: List[Request], time_limit: float = 3600.0,
@@ -429,7 +496,19 @@ class ServingLoop:
         self._spill_seen = (0, 0)                # (spilled, restored) fed
         self.job: Optional[PrefillJob] = None
         self.st = _LoopState(kv_budget=self.backend.kv_budget_tokens())
+        self._last_util = -1.0                   # last emitted kv counter
+        # fresh ledgers: phase stamping starts from a clean slate even
+        # when a request object is reused across runs
+        for r in requests:
+            r.ledger = LatencyLedger()
         self.backend.begin(requests)
+        if self.tracer.enabled:
+            # propagate the seam to the layers that emit their own
+            # events; AFTER begin — backends rebuild retention there
+            self.sched.tracer = self.tracer
+            rt = getattr(self.backend, "retention", None)
+            if rt is not None:
+                rt.tracer = self.tracer
         if self.recorder is not None:
             # AFTER begin (prompt ids materialized), BEFORE the loop
             # mutates state (requeues overwrite arrivals, session turns
@@ -440,6 +519,7 @@ class ServingLoop:
         else:
             self._run_fused(time_limit, static=self.cfg.mode == "static")
         st = self.st
+        self._note_util(self.backend.clock.now())   # close the integral
         overhead = getattr(getattr(self.sched, "buckets", None),
                            "overhead_s", 0.0)
         extra = {}
@@ -479,7 +559,11 @@ class ServingLoop:
             interleaved_decode_steps=st.interleaved,
             peak_pool=st.peak, preempt_events=st.preempts,
             prefill_tokens_processed=st.prefill_tok,
-            prefill_tokens_skipped=st.prefill_skip, **extra)
+            prefill_tokens_skipped=st.prefill_skip,
+            kv_util_time_weighted=st.util_acc
+            / max(self.backend.clock.now(), 1e-9),
+            batch_padding_fractions=st.pad_fracs,
+            batch_homogeneity=st.homog, **extra)
 
     # ------------------------------------------------------------ shared --
     def _wall_exceeded(self) -> bool:
@@ -502,26 +586,53 @@ class ServingLoop:
         while st.ai < len(self._arrivals) \
                 and self._arrivals[st.ai].arrival <= now:
             r = self._arrivals[st.ai]
-            self.sched.on_arrival(r, r.arrival if
-                                  self.backend.clock.virtual else now)
+            t = r.arrival if self.backend.clock.virtual else now
+            self.sched.on_arrival(r, t)
+            if r.ledger is not None and not r.ledger.started:
+                r.ledger.start(t)
+            if self.tracer.enabled:
+                self.tracer.async_begin(
+                    "requests", f"req-{r.rid}", t, r.rid,
+                    args={"cls": r.cls, "prompt_len": r.prompt_len})
             st.ai += 1
 
     def _process_joins(self, now: float) -> None:
         for item in list(self.pending_join):
             if item[0] <= now and len(self.pool) < self.cfg.decode_slot_cap:
-                self.pool.append(item[1])
+                r = item[1]
+                self.pool.append(r)
                 self.pending_join.remove(item)
+                if r.ledger is not None:
+                    # the transfer phase absorbs any decode-slot wait
+                    # past the modeled copy time (join is slot-gated)
+                    r.ledger.to("decode", now)
         self.st.peak = max(self.st.peak, len(self.pool))
 
     @staticmethod
     def _live_tokens(pool: Sequence[Request]) -> int:
         return sum(r.prompt_len + r.generated for r in pool)
 
-    def _requeue(self, r: Request, t: float) -> None:
+    def _requeue(self, r: Request, t: float, cause: str = "clamp",
+                 at: Optional[float] = None) -> None:
         """THE re-queue funnel: every path that puts a request back in
         the arrival queue (OOM restart, slot/page clamp, preemption,
         restore-hold release) goes through here, so the recorder sees
-        every re-arrival and stats are never double-counted."""
+        every re-arrival and stats are never double-counted.
+
+        ``cause`` picks the ledger phase the coming wait is blamed on:
+        "clamp" -> ``admission_block`` (bounced off a slot/page limit),
+        "restore" -> back to plain ``queue`` (the hold itself was
+        already accounted as ``restore_hold``), "oom"/"preempt" -> the
+        restart-penalty ``requeue_gap``, which begins at ``at`` (the
+        eviction instant), not at the post-penalty re-arrival ``t``."""
+        led = r.ledger
+        if led is not None and led.started and not led.closed:
+            if cause == "clamp":
+                led.to("admission_block", at if at is not None else t)
+            elif cause == "restore":
+                led.to("queue", at if at is not None else t)
+            else:                                    # oom | preempt
+                led.gap(at if at is not None else t, r.arrival)
         self.sched.on_arrival(r, t, requeue=True)
         if self.recorder is not None:
             self.recorder.on_requeue(r, t)
@@ -540,7 +651,7 @@ class ServingLoop:
                 self._retire(r, now)
                 continue
             r.arrival = now + self.cfg.restart_penalty
-            self._requeue(r, r.arrival)
+            self._requeue(r, r.arrival, cause="oom", at=now)
 
     def _note_first(self, r: Request) -> None:
         """First token just stamped: feed the TTFT sample to the monitor
@@ -554,10 +665,24 @@ class ServingLoop:
         """A request left the system (finished or dropped): count it
         done and, if it was a session turn, unlock the next one."""
         self.st.done += 1
-        if r.finished >= 0 and r.generated > 1:
-            mon = getattr(self.sched, "monitor", None)
-            if mon is not None and hasattr(mon, "on_tpot"):
+        led = r.ledger
+        if led is not None and led.started and not led.closed:
+            # close at the request's OWN finish stamp when it has one
+            # (static mode retires the whole batch at the batch end);
+            # drops close at the drop instant — they conserve too
+            led.close(r.finished if r.finished >= 0 else end)
+        if self.tracer.enabled:
+            self.tracer.async_end(
+                "requests", f"req-{r.rid}",
+                r.finished if r.finished >= 0 else end, r.rid,
+                args={"dropped": r.dropped})
+        mon = getattr(self.sched, "monitor", None)
+        if mon is not None:
+            if r.finished >= 0 and r.generated > 1 \
+                    and hasattr(mon, "on_tpot"):
                 mon.on_tpot(r.tpot(), r.cls)
+            if led is not None and led.closed and hasattr(mon, "on_retire"):
+                mon.on_retire(r.cls, led.phases)
         self._unlock_next_turn(r, end)
 
     def _unlock_next_turn(self, r: Request, end: float) -> None:
@@ -578,6 +703,13 @@ class ServingLoop:
             while nxt is not None:
                 nxt.dropped = True
                 nxt.finished = -1.0
+                led = nxt.ledger
+                if led is not None and not led.closed:
+                    # never admitted: open-and-shut at the cascade time
+                    # so dropped turns still satisfy conservation
+                    if not led.started:
+                        led.start(end)
+                    led.close(end)
                 self.st.done += 1
                 nxt = self._held.pop((r.session_id, nxt.turn + 1), None)
             return
@@ -601,6 +733,7 @@ class ServingLoop:
         """Backend housekeeping (session-TTL tick + spill/restore
         completion polling) once per iteration; forwards spill traffic
         deltas to the monitor."""
+        self._note_util(now)
         m = getattr(self.backend, "maintain", None)
         if m is not None:
             m(now)
@@ -619,6 +752,38 @@ class ServingLoop:
                 mon.on_restore_state(rt.restore_pages_in_flight(),
                                      rt.restore_backlog_bytes())
 
+    def _kv_level(self) -> float:
+        """Instantaneous KV-pool occupancy in [0, 1]: used pages for
+        paged backends, occupied slots for the slot engine, live tokens
+        against the Eq. (6) budget otherwise."""
+        alloc = getattr(self.backend, "alloc", None)
+        if alloc is not None:
+            n = getattr(alloc, "n_pages", 0)
+            if n:
+                return 1.0 - alloc.free_pages() / n
+        if self.backend.prefill_needs_slots:
+            cap = max(self.cfg.decode_slot_cap, 1)
+            return min(1.0, max(0.0,
+                                1.0 - self.backend.free_slots() / cap))
+        if math.isfinite(self.st.kv_budget) and self.st.kv_budget > 0:
+            return min(1.0,
+                       self._live_tokens(self.pool) / self.st.kv_budget)
+        return 0.0
+
+    def _note_util(self, now: float) -> None:
+        """Advance the time-weighted pool-occupancy integral to ``now``
+        (sampled once per loop iteration — level changes only at events,
+        which always run through an iteration boundary)."""
+        st = self.st
+        if now <= st.util_t:
+            return
+        level = self._kv_level()
+        st.util_acc += level * (now - st.util_t)
+        st.util_t = now
+        if self.tracer.enabled and abs(level - self._last_util) > 1e-9:
+            self.tracer.counter("kv", "kv_util", now, {"util": level})
+            self._last_util = level
+
     def _release_held(self, now: float) -> None:
         """Re-queue parked requests whose restore landed — their next
         admission finds the restored pages LIVE and resumes past them."""
@@ -629,7 +794,7 @@ class ServingLoop:
                 r.spill_wait = -1.0
                 # arrival stays untouched: the hold is queueing delay,
                 # so the restore latency lands on this request's TTFT
-                self._requeue(r, now)
+                self._requeue(r, now, cause="restore")
 
     def _form_batch(self, now: float, *,
                     count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
@@ -667,6 +832,8 @@ class ServingLoop:
                     # hit continues into spilled pages: PARK until the
                     # host->device restore lands — re-prefilling now
                     # would throw away restorable KV
+                    if r.ledger is not None:
+                        r.ledger.to("restore_hold", now)
                     self._held_restore.append([r.spill_wait, r])
                 else:
                     self._requeue(r, now)
@@ -683,6 +850,11 @@ class ServingLoop:
                 mon.on_prefix_lookup(r.prefix_hit_tokens, pc.page_size)
                 if r.session_hit_tokens:
                     mon.on_session_hit(r.session_hit_tokens)
+        st.pad_fracs.append(batch.padding_fraction)
+        st.homog.append(batch.homogeneity)
+        for r in batch.requests:
+            if r.ledger is not None:
+                r.ledger.to("formed", now)
         if self.recorder is not None:
             self.recorder.on_dispatch("prefill", batch.requests, now)
         return batch, False
@@ -716,8 +888,11 @@ class ServingLoop:
             r.prefix_hit_tokens = 0       # re-matched at the next admission
             r.session_hit_tokens = 0
             r.arrival = now + self.cfg.restart_penalty
-            self._requeue(r, r.arrival)
+            self._requeue(r, r.arrival, cause="preempt", at=now)
             self.st.preempts += 1
+            if self.tracer.enabled:
+                self.tracer.instant("decode", "preempt", now,
+                                    cat="preempt", args={"rid": r.rid})
         return bool(victims)
 
     def _advance_pool(self, end: float) -> None:
@@ -730,6 +905,13 @@ class ServingLoop:
                 self.backend.release(r)
                 self.sched.release_decode(r)
                 self._retire(r, end)
+
+    @staticmethod
+    def _bucket_track(batch: FormedBatch) -> str:
+        """Timeline track a batch's spans land on: its bucket's length
+        band, or the bare executor for bucketless policies."""
+        b = batch.bucket
+        return f"bucket[{b.low},{b.up})" if b is not None else "prefill"
 
     def _next_arrival(self) -> Optional[float]:
         if self.st.ai < len(self._arrivals):
@@ -804,6 +986,8 @@ class ServingLoop:
             job.started_at = now
             for r in batch.requests:
                 r.prefill_start = now
+                if r.ledger is not None:
+                    r.ledger.to("prefill", now)
         idx = job.next_chunk
         dur = self.backend.prefill_chunk(job, idx)
         job.next_chunk += 1
@@ -814,6 +998,11 @@ class ServingLoop:
         st.prefill_tok += job.chunks[idx][1] * batch.size
         for r in batch.requests:
             r.prefilled_tokens += job.chunks[idx][1]
+        if self.tracer.enabled:
+            self.tracer.complete(
+                self._bucket_track(batch), f"chunk {idx}", now, dur,
+                cat="prefill", args={"rows": batch.size,
+                                     "tokens": job.chunks[idx][1]})
 
         if job.done:
             # a chunk plan starting past 0 skipped a cached prefix: those
@@ -822,9 +1011,18 @@ class ServingLoop:
             st.prefill_skip += skip * batch.size
             self._account_prefill_batch(batch, skip=skip)
             xfer = self.backend.transfer_seconds(batch)
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    self._bucket_track(batch), f"batch x{batch.size}",
+                    job.started_at, end - job.started_at, cat="batch",
+                    args={"size": batch.size, "pad_to": batch.pad_to,
+                          "padding_fraction": batch.padding_fraction,
+                          "homogeneity": batch.homogeneity})
             for r in batch.requests:
                 r.first_token = end
                 r.generated = 1
+                if r.ledger is not None:
+                    r.ledger.mark_first(end)
                 self._note_first(r)
                 if r.generated >= r.max_new_tokens \
                         or not self.backend.supports_decode:
@@ -836,6 +1034,8 @@ class ServingLoop:
                     # batcher's Eq. (6) sees in-transfer caches too
                     # (prevents admission overshoot).
                     sched.admit_decode(r)
+                    if r.ledger is not None:
+                        r.ledger.to("transfer", end)
                     self.pending_join.append([end + xfer, r])
             st.t_xfer += xfer * batch.size
             self.job = None
@@ -857,6 +1057,10 @@ class ServingLoop:
         st.padded += fpt * n
         if self.job is not None:
             st.interleaved += 1       # decode ran between prefill chunks
+        if self.tracer.enabled:
+            self.tracer.complete("decode", "decode-iter", now, dur,
+                                 cat="decode", args={"pool": n})
+            self.tracer.counter("decode", "pool", now, {"requests": n})
         self._advance_pool(end)
         return end
 
@@ -921,10 +1125,21 @@ class ServingLoop:
                 dt += ddt
             end = now + dt if clock.virtual else clock.now()
             if batch is not None:
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        self._bucket_track(batch), f"batch x{batch.size}",
+                        now, end - now, cat="batch",
+                        args={"size": batch.size, "pad_to": batch.pad_to,
+                              "padding_fraction": batch.padding_fraction,
+                              "homogeneity": batch.homogeneity})
                 for r in batch.requests:
                     r.prefill_start = now
+                    if r.ledger is not None:
+                        r.ledger.to("prefill", now)
                     r.first_token = end          # interference: full iter
                     r.generated = 1
+                    if r.ledger is not None:
+                        r.ledger.mark_first(end)
                     self._note_first(r)
                 st.busy_p += pdt
                 st.t_pre += pdt * batch.size
@@ -948,6 +1163,8 @@ class ServingLoop:
                         self._retire(r, end)
                     else:
                         self.pool.append(r)
+                        if r.ledger is not None:
+                            r.ledger.to("decode", end)
                         sched.admit_decode(r)
                 st.peak = max(st.peak, len(self.pool))
             clock.advance(end)
@@ -973,8 +1190,13 @@ class ServingLoop:
         t = self._after(now, pdt)
         for r in batch.requests:
             r.prefill_start = now
+            if r.ledger is not None:
+                r.ledger.to("prefill", now)
             r.first_token = t
             r.generated = 1
+            if r.ledger is not None:
+                r.ledger.mark_first(t)
+                r.ledger.to("decode", t)
             self._note_first(r)
             sched.admit_decode(r)
         iters = max(r.max_new_tokens for r in batch.requests) - 1
@@ -998,4 +1220,13 @@ class ServingLoop:
             sched.release_decode(r)
             self.backend.release(r)
             self._retire(r, t)
+        if self.tracer.enabled:
+            # one span per batch covering the FULL executor hold —
+            # static mode's convoy effect, visible on the timeline
+            self.tracer.complete(
+                self._bucket_track(batch), f"batch x{n}", now, t - now,
+                cat="batch",
+                args={"size": n, "pad_to": pad,
+                      "padding_fraction": batch.padding_fraction,
+                      "homogeneity": batch.homogeneity})
         clock.advance(t)

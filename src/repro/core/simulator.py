@@ -380,7 +380,7 @@ class Simulator:
                  host_pool_tokens: Optional[int] = None,
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
-                 recorder=None):
+                 recorder=None, tracer=None):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
@@ -410,7 +410,7 @@ class Simulator:
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick),
-            recorder=recorder)
+            recorder=recorder, tracer=tracer)
 
     def run(self, requests: List[Request],
             time_limit: float = 3600.0) -> SimResult:

@@ -40,6 +40,7 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core import (BucketServeScheduler, MemoryBudget, SchedulerConfig)
 from repro.core.engine import ServingEngine
 from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.core.telemetry import Tracer, validate_perfetto
 from repro.data.trace import TraceRecorder, TraceWorkload
 from repro.data.workload import DEFAULT_CLASS_MIX, WorkloadSpec, generate
 from repro.launch.mesh import make_host_mesh
@@ -69,7 +70,23 @@ def _tail_line(res) -> str:
     return out
 
 
-def _run_sim(cfg, args, reqs, recorder=None):
+def _finish_timeline(args, tracer) -> None:
+    """Export + schema-validate the Perfetto timeline (--trace-out)."""
+    if tracer is None:
+        return
+    doc = tracer.save(args.trace_out)
+    errs = validate_perfetto(doc)
+    n_ev = sum(1 for e in doc["traceEvents"] if e.get("ph") != "M")
+    if errs:
+        for e in errs[:10]:
+            print(f"[trace] INVALID: {e}")
+        raise SystemExit(f"--trace-out produced an invalid trace "
+                         f"({len(errs)} schema violations)")
+    print(f"[trace] {n_ev} events on {len(tracer._tracks)} tracks -> "
+          f"{args.trace_out} (open in ui.perfetto.dev)")
+
+
+def _run_sim(cfg, args, reqs, recorder=None, tracer=None):
     """Cost-model pass over the identical workload (validation mode)."""
     hw = A100X4
     budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes,
@@ -85,7 +102,7 @@ def _run_sim(cfg, args, reqs, recorder=None):
                     host_pool_tokens=args.host_pool_tokens,
                     spill_bw=args.spill_bw * 1e9,
                     spill_dtype=args.spill_dtype,
-                    recorder=recorder)
+                    recorder=recorder, tracer=tracer)
     res = sim.run(reqs)
     prefix_info = ""
     if args.prefix_cache:
@@ -114,7 +131,14 @@ def _run_sim(cfg, args, reqs, recorder=None):
           f"{prefix_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
     print(f"[sim] {_tail_line(res)}")
+    print(f"[sim] kv util (time-weighted) {res.kv_util_time_weighted:.2f}; "
+          f"padding waste {res.padding_waste_ratio():.3f}; "
+          f"blame {_fmt_blame(res.blame())}")
     return res
+
+
+def _fmt_blame(b) -> str:
+    return "{" + ", ".join(f"{k}: {v:.3f}s" for k, v in b.items()) + "}"
 
 
 def _finish_trace(args, recorder) -> None:
@@ -163,6 +187,11 @@ def main():
     ap.add_argument("--session-ttl", type=float, default=60.0,
                     help="seconds a finished conversation's KV stays "
                          "pinned awaiting the next turn")
+    ap.add_argument("--think-time", type=float, default=0.0,
+                    help="mean think-time gap (s) between a session's "
+                         "turns; > --session-ttl exercises the "
+                         "expiry/demote path (with --kv-spill the next "
+                         "turn RESTORES instead of re-prefilling)")
     ap.add_argument("--kv-spill", action="store_true",
                     help="host-RAM spill tier under the retention layer "
                          "(core/retention.py): pressure/TTL eviction "
@@ -197,6 +226,12 @@ def main():
                          "versioned JSONL trace (data/trace.py) that "
                          "replays bit-identically through either "
                          "backend")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's event timeline as Chrome "
+                         "trace-event / Perfetto JSON "
+                         "(core/telemetry.py Tracer; open in "
+                         "ui.perfetto.dev — one track per bucket / "
+                         "spill channel / executor)")
     ap.add_argument("--trace-replay", default=None, metavar="PATH",
                     help="serve a recorded trace instead of generating "
                          "a workload (arrival timestamps preserved; "
@@ -252,7 +287,8 @@ def main():
                             max_model_len=cfg.max_seq_len,
                             vocab_size=cfg.vocab_size,
                             sessions=args.sessions, turns=args.turns,
-                            utterance_tokens=per_turn, max_new_tokens=8)
+                            utterance_tokens=per_turn, max_new_tokens=8,
+                            think_time_s=args.think_time)
         reqs = generate(spec)
     elif args.burst_factor > 1.0:
         # heterogeneous trace family: three-class mix under bursty
@@ -285,10 +321,12 @@ def main():
     # and its replay print the formed-batch log, so CI can diff them
     recorder = TraceRecorder() if (args.trace_record
                                    or args.trace_replay) else None
+    tracer = Tracer() if args.trace_out else None
 
     if args.backend == "sim":
-        _run_sim(cfg, args, reqs, recorder)
+        _run_sim(cfg, args, reqs, recorder, tracer)
         _finish_trace(args, recorder)
+        _finish_timeline(args, tracer)
         return
 
     mesh = None
@@ -318,7 +356,7 @@ def main():
                            host_pool_tokens=args.host_pool_tokens,
                            spill_bw=args.spill_bw * 1e9,
                            spill_dtype=args.spill_dtype,
-                           recorder=recorder)
+                           recorder=recorder, tracer=tracer)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -361,7 +399,12 @@ def main():
           f"{engine.interleaved_decode_steps}; {paged_info}"
           f"buckets: {[(b.low, b.up) for b in sched.buckets.buckets]}")
     print(_tail_line(engine.result))
+    print(f"kv util (time-weighted) "
+          f"{engine.result.kv_util_time_weighted:.2f}; padding waste "
+          f"{engine.result.padding_waste_ratio():.3f}; "
+          f"blame {_fmt_blame(engine.result.blame())}")
     _finish_trace(args, recorder)
+    _finish_timeline(args, tracer)
 
 
 if __name__ == "__main__":

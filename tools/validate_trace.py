@@ -1,0 +1,50 @@
+"""CI helper: schema-validate an exported Perfetto/Chrome trace and
+assert the expected span categories are present.
+
+    PYTHONPATH=src python tools/validate_trace.py run.perfetto.json \
+        --require batch,spill,restore
+
+Exits nonzero (with the violation list) on any schema error —
+non-monotonic timestamps, negative complete-span durations,
+non-numeric counter args, orphan or unbalanced async begin/end pairs —
+or if a required event category has no events.  ``serve.py
+--trace-out`` already refuses to write an invalid file; this re-checks
+the artifact FROM DISK, so CI catches a serializer regression too.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import sys
+
+from repro.core.telemetry import validate_perfetto
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="trace-event JSON file to validate")
+    ap.add_argument("--require", default="",
+                    help="comma-separated event categories that must "
+                         "each have >= 1 event")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errs = validate_perfetto(doc)
+    if errs:
+        sys.exit("\n".join(f"SCHEMA: {e}" for e in errs))
+
+    cats = collections.Counter(
+        e.get("cat") for e in doc["traceEvents"] if e.get("ph") != "M")
+    missing = [c for c in args.require.split(",")
+               if c and cats.get(c, 0) < 1]
+    if missing:
+        sys.exit(f"missing required span categories {missing}; "
+                 f"present: {dict(cats)}")
+    print(f"valid: {sum(cats.values())} events, "
+          + ", ".join(f"{c}={n}" for c, n in sorted(cats.items())))
+
+
+if __name__ == "__main__":
+    main()
