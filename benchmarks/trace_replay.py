@@ -156,10 +156,11 @@ def main(quick: bool = False) -> None:
             f"{res.slo_attainment():.3f}",
             f"{res.slo_attainment('chat'):.3f}",
             f"{res.slo_attainment('longctx'):.3f}",
-            f"{res.slo_attainment('batch'):.3f}"])
+            f"{res.slo_attainment('batch'):.3f}",
+            f"{res.goodput():.3f}"])
     emit(rows, ["system", "finished", "incomplete", "p50_ttft_s",
                 "p95_ttft_s", "p99_ttft_s", "p99_tpot_ms", "slo_all",
-                "slo_chat", "slo_longctx", "slo_batch"])
+                "slo_chat", "slo_longctx", "slo_batch", "goodput_rps"])
 
     # ---- gate (3): BucketServe beats static at the tail --------------
     assert res_b.incomplete() == 0, "bucketserve shed requests"

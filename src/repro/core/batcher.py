@@ -108,8 +108,15 @@ class DynamicBatchController:
         cap = self.token_budget(in_flight_tokens) * (1 - self.decode_reserve)
         return max(1, min(self.max_batch, int(cap / max(mean_len, 1.0))))
 
+    #: min-slack scale (s) over which the restore-backlog admission
+    #: throttle fades out: a queue whose tightest deadline has less
+    #: than this much slack left gets the restore pressure discounted
+    #: proportionally (zero slack = no throttle at all)
+    slack_relief_s = 1.0
+
     def admission_pressure_tokens(self, restore_pages: int,
-                                  restore_backlog_bytes: int) -> int:
+                                  restore_backlog_bytes: int,
+                                  min_slack: Optional[float] = None) -> int:
         """Restore-aware admission pricing (DESIGN.md §4): Eq.-(6)
         token-equivalents of host-tier restore traffic the plain
         in-flight sum misses.
@@ -124,10 +131,23 @@ class DynamicBatchController:
         evict/restore thrash the reservations exist to prevent.  A
         compressed spill tier (int8/int4) queues fewer bytes per page,
         so its backlog term is proportionally cheaper — quantized spill
-        shows up in admission exactly as it does on the wire."""
+        shows up in admission exactly as it does on the wire.
+
+        ``min_slack`` (DESIGN.md §8, fed by the goodput scheduler from
+        the monitor's minimum-slack gauge) scales the BACKLOG term by
+        how much deadline slack the queue still has: throttling
+        admission to protect a restore's resume-TTFT is the wrong trade
+        while a near-deadline request starves, so the channel-backlog
+        pressure fades linearly to zero as min slack approaches zero.
+        Reserved pages are never discounted — they are physically
+        occupied."""
         pages = restore_pages * self.page_size \
             if self.memory_model == "paged" else 0
-        return pages + int(restore_backlog_bytes / self.kv_per_tok)
+        backlog = int(restore_backlog_bytes / self.kv_per_tok)
+        if min_slack is not None:
+            backlog = int(backlog * min(
+                max(min_slack / self.slack_relief_s, 0.0), 1.0))
+        return pages + backlog
 
     def _cache_len(self, r: Request) -> int:
         win = self.cfg.sliding_window or (

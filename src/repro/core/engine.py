@@ -306,6 +306,10 @@ class JaxEngineBackend:
     """ExecutionBackend over jitted prefill/decode on the local device."""
 
     prefill_needs_slots = True
+    # armed by the ServingLoop when the scheduler is slack-aware: a
+    # CLOCK-FREE key (Request -> seconds) preferring the victim with
+    # the most remaining deadline slack (DESIGN.md §8)
+    slack_of = None
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  cache_len: Optional[int] = None, moe_impl: str = "local",
@@ -460,8 +464,10 @@ class JaxEngineBackend:
         return min(r.prompt_len + 1, self.s_attn)
 
     def _decode_tokens(self, r: Request) -> int:
-        """Tokens after this iteration's write at slot prompt+generated-1."""
-        return min(r.prompt_len + r.generated, self.s_attn)
+        """Tokens after this iteration's write at slot
+        prompt+generated-sliced-1 (sliced tokens were promoted into the
+        prompt by a slice-yield and are already inside prompt_len)."""
+        return min(r.prompt_len + r.generated - r.sliced_tokens, self.s_attn)
 
     def free_blocks(self) -> int:
         """Engine-level observability (serve.py printout); admission
@@ -483,7 +489,8 @@ class JaxEngineBackend:
             return []
         victims = paging.extend_for_decode(self.alloc, pool,
                                            self._decode_tokens,
-                                           cache=self.retention)
+                                           cache=self.retention,
+                                           slack_of=self.slack_of)
         for v in victims:
             slot = self._slot_of.pop(v.rid, None)
             if slot is not None:
@@ -491,7 +498,9 @@ class JaxEngineBackend:
                 self._bt.clear(slot, v.rid)
             else:
                 self._bt.forget(v.rid)
-            self.outputs[v.rid] = []         # regenerated after re-prefill
+            # outputs survive here: the loop decides whether the victim
+            # keeps a slice (on_slice_yield truncates) or restarts
+            # (on_preempt_reset wipes)
         for r in pool:                       # tables may have grown a page
             slot = self._slot_of.get(r.rid)
             if slot is not None:
@@ -500,6 +509,17 @@ class JaxEngineBackend:
                 # O(pool x pages_per_seq) on EVERY dispatch
                 self._bt.sync(slot, r.rid, self.alloc)
         return victims
+
+    def on_slice_yield(self, req: Request, keep: int) -> None:
+        """Slice-boundary preemption kept ``keep`` generated tokens
+        (now promoted into the prompt): drop only the unaligned tail —
+        the resume prefill's argmax re-appends from position keep."""
+        out = self.outputs.get(req.rid)
+        if out is not None:
+            del out[keep:]
+
+    def on_preempt_reset(self, req: Request) -> None:
+        self.outputs[req.rid] = []       # regenerated after re-prefill
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         total = max(batch.pad_to, 8)     # min real-tensor prompt width
@@ -773,7 +793,10 @@ class JaxEngineBackend:
         ``req``: prompt plus generated[:-1] — the iteration that
         produced the LAST token never wrote its KV."""
         out = self.outputs.get(req.rid) or []
-        gen = np.asarray(out[:max(req.generated - 1, 0)], np.int32)
+        # generated[:sliced_tokens] already live inside the prompt
+        # (slice-yield promotion) — exclude them or they'd count twice
+        gen = np.asarray(out[req.sliced_tokens:max(req.generated - 1, 0)],
+                         np.int32)
         return np.concatenate(
             [np.asarray(self._prompt_tokens(req), np.int32), gen])
 
@@ -801,6 +824,7 @@ class ServingEngine:
                  host_pool_tokens: Optional[int] = None,
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
+                 slice_tokens: Optional[int] = None,
                  recorder=None, tracer=None):
         self.cfg = cfg
         self.params = params
@@ -813,7 +837,8 @@ class ServingEngine:
             session_ttl=session_ttl, host_pool_tokens=host_pool_tokens,
             spill_bw=spill_bw, spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
-            mode="disagg", decode_slot_cap=max_slots), recorder=recorder,
+            mode="disagg", decode_slot_cap=max_slots,
+            slice_tokens=slice_tokens), recorder=recorder,
             tracer=tracer)
         self.result: Optional[ServeResult] = None
 

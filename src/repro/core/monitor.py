@@ -43,6 +43,12 @@ class Snapshot:
     # (core/telemetry.py blame_means — the ONE aggregation rule shared
     # with ServeResult.blame)
     blame: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # deadline-slack state (DESIGN.md §8): rolling per-class goodput
+    # (fraction of recently retired requests meeting BOTH SLO budgets)
+    # and the tightest live deadline slack seen at the goodput
+    # scheduler's last queue scan — what its admission relief steers on
+    class_goodput: Dict[str, float] = dataclasses.field(default_factory=dict)
+    min_slack_s: float = float("inf")
 
 
 def _nearest_rank(xs, q: float) -> float:
@@ -70,6 +76,15 @@ class GlobalMonitor:
         # phase dicts keyed by request class ('' = untagged)
         self.blame_samples: Dict[str, Deque[Dict[str, float]]] = \
             collections.defaultdict(lambda: collections.deque(maxlen=512))
+        # rolling per-class SLO outcomes (DESIGN.md §8): one met/missed
+        # flag per retired request, windowed like blame — the live
+        # goodput estimate a deadline-aware scheduler steers on
+        self.slo_samples: Dict[str, Deque[bool]] = \
+            collections.defaultdict(lambda: collections.deque(maxlen=512))
+        # tightest deadline slack over the queued requests at the
+        # goodput scheduler's last scan (a LEVEL, overwritten per scan;
+        # inf = no queue or no slack-aware scheduler attached)
+        self.min_slack_s = float("inf")
         self.history: List[Snapshot] = []
         self.in_flight_tokens = 0
         self.decode_pool = 0
@@ -123,10 +138,21 @@ class GlobalMonitor:
         """A request finished with a per-output-token latency sample."""
         self.tpot_samples.append(tpot_s)
 
-    def on_retire(self, cls: str, phases: Dict[str, float]) -> None:
+    def on_retire(self, cls: str, phases: Dict[str, float],
+                  slo_met: bool | None = None) -> None:
         """A request retired with a closed latency ledger: keep its
-        phase breakdown in the rolling per-class blame window."""
+        phase breakdown in the rolling per-class blame window, and
+        (when the loop reports it) its SLO outcome in the rolling
+        goodput window."""
         self.blame_samples[cls].append(dict(phases))
+        if slo_met is not None:
+            self.slo_samples[cls].append(bool(slo_met))
+
+    def on_slack(self, slack_s: float) -> None:
+        """The slack-aware scheduler scanned its queue: overwrite the
+        tightest remaining deadline slack it saw (seconds; negative =
+        a request is already past its TTFT budget)."""
+        self.min_slack_s = slack_s
 
     def on_prefix_lookup(self, hit_tokens: int, page_size: int) -> None:
         """One admitted request matched against the prefix cache:
@@ -203,6 +229,12 @@ class GlobalMonitor:
         request class (all classes pooled when every sample is '')."""
         return blame_means(list(self.blame_samples.get(cls, ())))
 
+    def class_goodput(self) -> Dict[str, float]:
+        """Rolling per-class goodput: fraction of recently retired
+        requests (the slo_samples window) that met both SLO budgets."""
+        return {cls: sum(dq) / len(dq)
+                for cls, dq in self.slo_samples.items() if dq}
+
     def snapshot(self, t: float) -> Snapshot:
         self._prune_arrivals(t)     # idle tail: rate decays without events
         pooled = [s for dq in self.blame_samples.values() for s in dq]
@@ -216,6 +248,8 @@ class GlobalMonitor:
                      self.tpot_percentile(50), self.tpot_percentile(99),
                      ttft_p95=self.ttft_percentile(95),
                      tpot_p95=self.tpot_percentile(95),
-                     blame=blame_means(pooled))
+                     blame=blame_means(pooled),
+                     class_goodput=self.class_goodput(),
+                     min_slack_s=self.min_slack_s)
         self.history.append(s)
         return s

@@ -392,48 +392,71 @@ def admit_blocks(alloc: BlockAllocator, requests: Sequence,
 
 def extend_for_decode(alloc: BlockAllocator, pool: Sequence,
                       decode_tokens: Callable[[object], int],
-                      cache=None) -> List:
+                      cache=None, slack_of=None) -> List:
     """Pre-decode page extension with preemption: grow every pooled
     request's table to cover its next token write; on exhaustion free
     pages in cheapness order — (1) the cache's ordered retention
     policy (expired session tails, then LRU zero-ref cached prefixes,
     then live session tails — nobody in flight loses work, see
-    ``KvRetention.evict``), then (2) preempt a strictly YOUNGER pooled
-    request, preferring the one whose release RECLAIMS the most pages
-    (a victim whose pages are all shared frees nothing and is never
-    picked), tie-broken by youngest (latest arrival, then highest rid).
-    If the starving request is the youngest — or no younger victim can
-    free a page — it preempts itself rather than robbing an older
-    request.  Oldest-first processing therefore guarantees the head of
-    the pool always progresses (no livelock).  Returns the victims
-    (their pages already released); the caller re-queues them.
+    ``KvRetention.evict``), then (2) preempt a pooled request LATER in
+    the processing order, preferring the one whose release RECLAIMS the
+    most pages (a victim whose pages are all shared frees nothing and
+    is never picked).  If the starving request is last in order — or no
+    later victim can free a page — it preempts itself rather than
+    robbing an earlier request.  Front-of-order-first processing
+    therefore guarantees the head of the pool always progresses (no
+    livelock).  Returns the victims (their pages already released); the
+    caller re-queues them.
+
+    Processing order is the policy knob (DESIGN.md §8):
+
+    * default — oldest first ``(arrival, rid)``; victims prefer
+      (most reclaimable pages, youngest) — the legacy youngest-first
+      preemption every pre-goodput gate was built on;
+    * ``slack_of`` set (slack-aware schedulers) — least deadline slack
+      first; victims prefer (MOST slack, most reclaimable).  The
+      sacrificed request is the one whose class budget tolerates the
+      restart best.  ``slack_of`` must be CLOCK-FREE
+      (``Request.sacrifice_slack``) or preemption decisions would
+      diverge between the wall- and virtual-clock backends.
 
     Victim membership is tracked in a rid-keyed set — the old
     ``c not in victims`` list scan made this O(n^2) in pool size."""
+    if slack_of is None:
+        def key(r):
+            return (r.arrival, r.rid)
+
+        def vkey(c):
+            return (alloc.reclaimable(c.rid), c.arrival, c.rid)
+    else:
+        def key(r):
+            return (slack_of(r), r.rid)
+
+        def vkey(c):
+            return (slack_of(c), alloc.reclaimable(c.rid), c.rid)
     victims: List = []
     victim_rids = set()
-    order = sorted(pool, key=lambda r: (r.arrival, r.rid))
+    order = sorted(pool, key=key)
     for r in order:
         if r.rid in victim_rids:
             continue
         while alloc.extend(r.rid, decode_tokens(r)) is None:
             if cache is not None and cache.evict_one(alloc):
                 continue                     # freed a cached page; retry
-            younger = [c for c in order if c.rid not in victim_rids
-                       and c is not r and alloc.holds(c.rid)
-                       and (c.arrival, c.rid) > (r.arrival, r.rid)
-                       and alloc.reclaimable(c.rid) > 0]
-            if not younger:
-                # r is the youngest live request (or nobody younger can
-                # free a page) and still starves: it preempts ITSELF —
-                # never an older one (they are closer to finishing and
-                # have consumed more work)
+            later = [c for c in order if c.rid not in victim_rids
+                     and c is not r and alloc.holds(c.rid)
+                     and key(c) > key(r)
+                     and alloc.reclaimable(c.rid) > 0]
+            if not later:
+                # r is last in the processing order (or nobody after it
+                # can free a page) and still starves: it preempts
+                # ITSELF — never one ahead of it (those are either
+                # older or tighter on deadline)
                 alloc.release(r.rid)
                 victims.append(r)
                 victim_rids.add(r.rid)
                 break
-            v = max(younger, key=lambda c: (alloc.reclaimable(c.rid),
-                                            c.arrival, c.rid))
+            v = max(later, key=vkey)
             alloc.release(v.rid)
             victims.append(v)
             victim_rids.add(v.rid)

@@ -66,6 +66,12 @@ class Request:
     # padded prompt tokens this request actually ran through the
     # prefill executor (accumulates across preemption restarts)
     prefilled_tokens: int = 0
+    # slice-boundary preemption (DESIGN.md §8): generated tokens that
+    # were PROMOTED into the prompt when a mid-generation yield
+    # preserved work — ``tokens[:prompt_len]`` then ends with
+    # ``sliced_tokens`` already-generated ids, and the true user prompt
+    # is ``prompt_len - sliced_tokens`` tokens.  0 = never sliced.
+    sliced_tokens: int = 0
     # per-request phase attribution (core/telemetry.py): the ServingLoop
     # installs a fresh ledger at run start and stamps every transition;
     # phase durations sum to (retirement - first arrival) — the
@@ -83,8 +89,18 @@ class Request:
     def S(self) -> int:
         return self.prompt_len
 
+    def t0(self) -> float:
+        """FIRST arrival — the deadline anchor.  Requeue paths
+        (OOM/preempt restart penalties) overwrite ``arrival``; anchoring
+        SLOs there would silently extend every deadline a requeue
+        touches.  The ledger keeps the original stamp."""
+        if self.ledger is not None and self.ledger.started:
+            return self.ledger.t0
+        return self.arrival
+
     def ttft(self) -> float:
-        return self.first_token - self.arrival if self.first_token >= 0 else float("inf")
+        return self.first_token - self.t0() if self.first_token >= 0 \
+            else float("inf")
 
     def tpot(self) -> float:
         if self.finished < 0 or self.generated <= 1:
@@ -92,7 +108,41 @@ class Request:
         return (self.finished - self.first_token) / max(self.generated - 1, 1)
 
     def e2e(self) -> float:
-        return self.finished - self.arrival if self.finished >= 0 else float("inf")
+        return self.finished - self.t0() if self.finished >= 0 \
+            else float("inf")
+
+    # ------------------------------------------------ deadline slack ------
+    def ttft_slack(self, now: float) -> float:
+        """Seconds until the TTFT budget is blown (negative = late)."""
+        return self.slo_ttft - (now - self.t0())
+
+    def tpot_slack(self, now: float) -> float:
+        """Seconds of per-token budget remaining: the class allows
+        ``slo_tpot`` per generated token after the first."""
+        budget = self.slo_tpot * max(self.generated - 1, 1)
+        return budget - (now - self.first_token)
+
+    def slack(self, now: float) -> float:
+        """Live deadline slack: TTFT slack before the first token,
+        per-token TPOT slack after."""
+        if self.first_token < 0:
+            return self.ttft_slack(now)
+        return self.tpot_slack(now)
+
+    def sacrifice_slack(self) -> float:
+        """CLOCK-FREE slack proxy for victim/eviction ordering.
+
+        Live ``slack(now)`` depends on the backend clock (wall vs
+        virtual seconds), so ordering sacrifices by it would break
+        engine-vs-sim parity on preemption decisions.  This proxy ranks
+        by how much budget the CLASS still grants — the full TTFT
+        budget before the first token, the remaining-token TPOT budget
+        after — which depends only on class budgets and token counts,
+        both parity-equal.  Larger = more tolerant of being sacrificed.
+        """
+        if self.first_token < 0:
+            return self.slo_ttft
+        return self.slo_tpot * max(self.max_new_tokens - self.generated, 1)
 
     def slo_met(self) -> bool:
         """SLO attainment: both TTFT and per-token latency within bound."""

@@ -115,6 +115,11 @@ class _Session:
     tail_hslot: Optional[int] = None   # host slot (spilled/restoring tail)
     tail_ready: float = -1.0           # restore completion time
     stamp: int = 0                     # LRU rank shared with radix nodes
+    # class TTFT budget of the turn that retained this transcript: the
+    # slack-aware eviction rung's CLOCK-FREE sacrifice rank (a
+    # loose-budget batch session tolerates a cold resume far better
+    # than a 2 s-TTFT chat session — DESIGN.md §8)
+    slo_ttft: float = 2.0
 
 
 class KvRetention:
@@ -139,6 +144,12 @@ class KvRetention:
         # scales included) — what a spill/restore transfer MOVES; 0 in
         # legacy call sites that never read the byte stats
         self.spill_page_bytes = spill_page_bytes
+        # slack-aware sacrifice ordering (DESIGN.md §8): armed by the
+        # ServingLoop when the scheduler is deadline-slack aware — the
+        # live-session eviction rung then sacrifices the session whose
+        # class budget tolerates a cold resume best (largest slo_ttft)
+        # instead of the soonest-expiring one
+        self.slack_aware = False
         self.prefix = PrefixCache(page_size)
         self.prefix.on_host_drop = self._on_host_drop
         # event-timeline seam (core/telemetry.py): the ServingLoop
@@ -342,7 +353,8 @@ class KvRetention:
             self.sessions[sid] = _Session(
                 sid=sid, turn=req.turn, path=path[:T],
                 full_tokens=full * self.page_size, tail_page=tail_page,
-                expires_at=expires, stamp=self.prefix._tick())
+                expires_at=expires, stamp=self.prefix._tick(),
+                slo_ttft=req.slo_ttft)
             self._next_expiry = min(self._next_expiry, expires)
             self.stats.sessions_retained += 1
         return alloc.release(req.rid)
@@ -570,8 +582,17 @@ class KvRetention:
         freed = 0
         if need <= 0 or not self.sessions:
             return 0
-        for sid, e in sorted(self.sessions.items(),
-                             key=lambda kv: kv[1].expires_at):
+        if self.slack_aware and not expired_only:
+            # slack-ordered sacrifice (DESIGN.md §8): unpin the session
+            # whose class TTFT budget is LOOSEST first — a batch-class
+            # transcript eats a cold resume inside its budget; a chat
+            # session does not.  Ties fall back to soonest-expiring.
+            # The rank is clock-free (class budgets only), so eviction
+            # decisions stay parity-equal across backends.
+            key = lambda kv: (-kv[1].slo_ttft, kv[1].expires_at)  # noqa: E731
+        else:
+            key = lambda kv: kv[1].expires_at                     # noqa: E731
+        for sid, e in sorted(self.sessions.items(), key=key):
             if freed >= need:
                 break
             if (e.claimed_by is not None or e.tail_page is None

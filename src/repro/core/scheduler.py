@@ -49,6 +49,12 @@ class SchedulerBase:
     (``next_prefill_batch``).  Pure policy: no clocks, no devices."""
 
     name = "base"
+    #: Deadline-slack scheduling (DESIGN.md §8): when True, the
+    #: ServingLoop arms slack-aware sacrifice ordering in the backend
+    #: (extend_for_decode victims, retention rungs, restore-hold
+    #: release).  Base schedulers keep the legacy youngest-first/LRU
+    #: orderings so existing gates are untouched.
+    slack_aware = False
 
     def __init__(self, cfg: ModelConfig, budget: MemoryBudget, *,
                  memory_model: str = "sum", max_batch: int = 512,
@@ -169,7 +175,7 @@ class BucketServeScheduler(SchedulerBase):
             self.monitor.mean_seq_len(),
             self.monitor.in_flight_tokens + self._pressure_tokens())
 
-    def _pick_bucket(self) -> Optional[Bucket]:
+    def _pick_bucket(self, now: float) -> Optional[Bucket]:
         """Bucket choice per scheduling tick.  The earliest-online
         arrival per bucket is maintained INCREMENTALLY by the
         BucketManager (O(1) on add, recomputed only for buckets that
@@ -186,6 +192,13 @@ class BucketServeScheduler(SchedulerBase):
             return min(nonempty, key=lambda b: b.low)
         return max(nonempty, key=lambda b: b.up)
 
+    def _order_bucket(self, b: Bucket, now: float):
+        """Within-bucket candidate ordering (the form_batch greedy packs
+        a prefix of this list) — the policy hook subclasses override."""
+        has_online = b.earliest_online() is not None
+        policy = "fcfs" if has_online else self.sched.offline_policy
+        return self.buckets.order_bucket(b, policy)
+
     def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
         """One scheduling tick: Algorithm 1 adjust + batch formation."""
         n_max = self._n_max()
@@ -195,12 +208,10 @@ class BucketServeScheduler(SchedulerBase):
             self._last_n_max = n_max
         self.buckets.adjust(n_max)
         self.monitor.n_buckets = len(self.buckets.buckets)
-        b = self._pick_bucket()
+        b = self._pick_bucket(now)
         if b is None:
             return None
-        has_online = b.earliest_online() is not None
-        policy = "fcfs" if has_online else self.sched.offline_policy
-        ordered = self.buckets.order_bucket(b, policy)
+        ordered = self._order_bucket(b, now)
         batch = self.batcher.form_batch(
             ordered, self.monitor.in_flight_tokens + self._pressure_tokens())
         if not batch.requests:
@@ -217,3 +228,111 @@ class BucketServeScheduler(SchedulerBase):
         bytes_ = sum(r.prompt_len for r in batch.requests) * \
             self.batcher.kv_per_tok
         return bytes_ / self.sched.kv_transfer_bw
+
+
+class GoodputScheduler(BucketServeScheduler):
+    """Deadline-slack goodput scheduler (DESIGN.md §8).
+
+    Same Bucketing Manager + Eq.-(6) Batching Controller as BucketServe
+    — batches stay size-homogeneous — but candidate ORDER inside the
+    picked bucket (and the bucket pick itself) is driven by per-request
+    deadline urgency instead of arrival order:
+
+        urgency  = waited / slo_ttft        (class-normalized queue age)
+        bonus    = 1 - tokens_left / ref    (short jobs retire SLOs fast)
+        priority = urgency + bonus
+
+    the SLA-constrained priority-scheduler shape (arXiv 2503.05248):
+    normalizing the wait by the CLASS budget is what lets a 2 s-TTFT
+    chat request overtake a 120 s-budget batch job that arrived first.
+    ``waited`` anchors on ``Request.t0()`` (the ledger's first-arrival
+    stamp), so OOM/preempt requeues cannot silently reset urgency.
+
+    Force-include SLA protection, in three tiers.  A request whose
+    remaining slack has shrunk below ``force_frac`` of its class budget
+    but is STILL WINNABLE sorts ahead of every unforced candidate
+    regardless of score — the form_batch greedy packs a prefix of the
+    ordering, so forced requests can only be excluded by the memory
+    bound itself.  A request already PAST its deadline is the
+    opposite case: it can never earn goodput again, so it demotes
+    below every winnable candidate instead of clogging the front of
+    the queue (it still gets served — whenever no winnable work is
+    queued — so throughput is shed last, not first).
+
+    ``slack_aware = True`` additionally flips every sacrifice point the
+    ServingLoop arms (extend_for_decode victims, retention rungs,
+    restore-hold release) to slack ordering — see
+    ``Request.sacrifice_slack`` for why those use a clock-free proxy.
+    """
+
+    name = "goodput"
+    slack_aware = True
+    #: tokens_left normalizer for the short-job bonus: one full
+    #: normalizer of remaining decode work cancels one full TTFT budget
+    #: of queue age (the exemplar's ``(10 - tokens_left)/10`` shape,
+    #: scaled to this repo's output lengths).
+    short_job_ref = 256.0
+    #: force-include threshold: a winnable request whose remaining
+    #: slack is below this fraction of its class budget jumps every
+    #: unforced candidate.
+    force_frac = 0.3
+
+    # ------------------------------------------------------------ scoring --
+    def _priority(self, r: Request, now: float) -> float:
+        waited = max(now - r.t0(), 0.0)
+        urgency = waited / max(r.slo_ttft, 1e-9)
+        left = max(r.max_new_tokens - r.generated, 0)
+        bonus = max(0.0, 1.0 - left / self.short_job_ref)
+        return urgency + bonus
+
+    def _tier(self, r: Request, now: float) -> int:
+        """+1 forced (winnable, nearly late), 0 normal, -1 past its
+        deadline (can never earn goodput — served when nothing winnable
+        queues).  The budget normalizing the slack is the phase's own:
+        TTFT before the first token, the remaining-token TPOT budget
+        after (a slice-yielded request re-queues mid-generation)."""
+        budget = r.slo_ttft if r.first_token < 0 \
+            else r.slo_tpot * max(r.max_new_tokens - 1, 1)
+        ratio = r.slack(now) / max(budget, 1e-9)
+        if ratio <= 0.0:
+            return -1
+        return 1 if ratio <= self.force_frac else 0
+
+    def _score_key(self, r: Request, now: float):
+        # rid tiebreak keeps the ordering fully deterministic (and
+        # backend-independent when scores tie)
+        return (self._tier(r, now), self._priority(r, now), -r.rid)
+
+    # ----------------------------------------------------------- ordering --
+    def _order_bucket(self, b: Bucket, now: float):
+        return sorted(b.requests,
+                      key=lambda r: self._score_key(r, now), reverse=True)
+
+    def _pick_bucket(self, now: float) -> Optional[Bucket]:
+        """The bucket holding the most urgent candidate wins — batches
+        stay homogeneous (one bucket per batch), urgency just decides
+        WHICH bucket forms next."""
+        nonempty = self.buckets.nonempty()
+        if not nonempty:
+            return None
+        return max(nonempty,
+                   key=lambda b: max(self._score_key(r, now)
+                                     for r in b.requests))
+
+    # ------------------------------------------------------------- gauges --
+    def next_prefill_batch(self, now: float) -> Optional[FormedBatch]:
+        slacks = [r.slack(now)
+                  for b in self.buckets.nonempty() for r in b.requests]
+        if slacks:
+            self.monitor.on_slack(min(slacks))
+        return super().next_prefill_batch(now)
+
+    def _pressure_tokens(self) -> int:
+        """Slack-aware restore pricing: when the queue's minimum slack
+        is tight, the restore-backlog admission throttle is relaxed —
+        protecting a restore's resume-TTFT is pointless while a
+        deadline-critical request starves in the queue."""
+        return self.batcher.admission_pressure_tokens(
+            self.monitor.restore_pages_in_flight,
+            self.monitor.restore_backlog_bytes,
+            min_slack=self.monitor.min_slack_s)

@@ -184,10 +184,21 @@ class ExecutionBackend(Protocol):
 
     def decode_preempt(self, pool: Sequence[Request]) -> List[Request]:
         """Called before each decode iteration: grow every pooled
-        request's pages to cover its next token write, preempting the
-        YOUNGEST requests on pool exhaustion (backend state for victims
-        is already torn down).  The loop re-queues the returned victims
+        request's pages to cover its next token write, preempting
+        requests on pool exhaustion (youngest first, or most-slack
+        first when the loop armed ``slack_of``; KV pages for victims
+        are already freed).  The loop re-queues the returned victims
         via ``requeue=True``.  Non-paged backends return []."""
+
+    def on_slice_yield(self, req: Request, keep: int) -> None:
+        """A preempted request kept its first ``keep`` generated tokens
+        (slice-boundary yield): drop backend generation state PAST them
+        — the engine truncates its output list, the cost model's
+        deterministic id stream is prefix-stable by construction."""
+
+    def on_preempt_reset(self, req: Request) -> None:
+        """A preempted request restarts from scratch: drop all of its
+        generated state (the engine wipes its output list)."""
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         """Split a batch's padded prompt into (start, length) spans."""
@@ -244,6 +255,7 @@ class ServeResult:
     interleaved_decode_steps: int = 0    # decode iters run mid-prefill-job
     peak_pool: int = 0                   # max concurrent decode requests
     preempt_events: int = 0              # paged-pool mid-decode evictions
+    slice_yields: int = 0                # ... that preserved generated work
     # ---- prefix-cache accounting (core/prefix_cache.py) ----
     prefill_tokens_processed: int = 0    # padded prompt tokens actually run
     prefill_tokens_skipped: int = 0      # prompt tokens served from cache
@@ -360,6 +372,16 @@ class ServeResult:
             return 0.0
         return sum(r.slo_met() for r in reqs) / len(reqs)
 
+    def goodput(self, cls: Optional[str] = None) -> float:
+        """Requests per second that FINISHED inside both SLO budgets —
+        the deadline-aware throughput the goodput scheduler optimizes
+        (DESIGN.md §8).  Unlike ``slo_attainment`` (a fraction) this is
+        denominated in absolute work, so shedding load can never game
+        it; unlike ``server_rps`` a late finish earns nothing."""
+        n = sum(1 for r in self.requests
+                if r.slo_met() and (cls is None or r.cls == cls))
+        return n / max(self.makespan, 1e-9)
+
     def utilization(self, hw) -> float:
         """Model-FLOPs utilization over the busy window (the cost model's
         analogue of the paper's GPU-utilization metric)."""
@@ -434,6 +456,7 @@ class _LoopState:
     interleaved: int = 0
     peak: int = 0
     preempts: int = 0
+    slice_yields: int = 0
     prefill_tok: int = 0
     prefill_skip: int = 0
     # time-weighted KV occupancy integral (level x dt, advanced once
@@ -451,6 +474,13 @@ class LoopConfig:
     decode_slot_cap: int = 256
     restart_penalty: float = 0.5
     tick: float = 0.005
+    # slice-boundary preemption (DESIGN.md §8, arXiv 2406.13511): a
+    # preempted decode request keeps its generated tokens up to the
+    # last multiple of ``slice_tokens`` — they are promoted into its
+    # prompt, so the requeued request RE-PREFILLS the preserved work
+    # (bounded, parallel) instead of re-decoding it (serial).  None
+    # disables (legacy full-restart preemption).  Disagg mode only.
+    slice_tokens: Optional[int] = None
 
 
 # ------------------------------------------------------------------ loop --
@@ -461,6 +491,10 @@ class ServingLoop:
                  config: LoopConfig = LoopConfig(), recorder=None,
                  tracer=None):
         assert config.mode in ("disagg", "coupled", "static"), config.mode
+        # slice resume re-enters through chunked prefill + transfer/join;
+        # the fused loops stamp first_token/generated unconditionally
+        assert config.slice_tokens is None or config.mode == "disagg", \
+            "slice-boundary preemption requires the disagg topology"
         self.sched = scheduler
         self.backend = backend
         self.cfg = config
@@ -502,6 +536,19 @@ class ServingLoop:
         for r in requests:
             r.ledger = LatencyLedger()
         self.backend.begin(requests)
+        # deadline-slack sacrifice wiring (DESIGN.md §8): when the
+        # scheduler is slack-aware, every sacrifice point — decode
+        # victim choice, retention eviction rungs, restore-hold release
+        # — prefers the request/session with the MOST remaining slack.
+        # AFTER begin: backends rebuild retention there.  The victim
+        # key is the CLOCK-FREE class-budget proxy so both substrates
+        # pick identical victims regardless of clock skew.
+        self._slack_aware = bool(getattr(self.sched, "slack_aware", False))
+        if self._slack_aware:
+            self.backend.slack_of = Request.sacrifice_slack
+            rt0 = getattr(self.backend, "retention", None)
+            if rt0 is not None:
+                rt0.slack_aware = True
         if self.tracer.enabled:
             # propagate the seam to the layers that emit their own
             # events; AFTER begin — backends rebuild retention there
@@ -558,6 +605,7 @@ class ServingLoop:
             transfer_time_total=st.t_xfer,
             interleaved_decode_steps=st.interleaved,
             peak_pool=st.peak, preempt_events=st.preempts,
+            slice_yields=st.slice_yields,
             prefill_tokens_processed=st.prefill_tok,
             prefill_tokens_skipped=st.prefill_skip,
             kv_util_time_weighted=st.util_acc
@@ -682,7 +730,7 @@ class ServingLoop:
                     and hasattr(mon, "on_tpot"):
                 mon.on_tpot(r.tpot(), r.cls)
             if led is not None and led.closed and hasattr(mon, "on_retire"):
-                mon.on_retire(r.cls, led.phases)
+                mon.on_retire(r.cls, led.phases, slo_met=r.slo_met())
         self._unlock_next_turn(r, end)
 
     def _unlock_next_turn(self, r: Request, end: float) -> None:
@@ -786,15 +834,22 @@ class ServingLoop:
 
     def _release_held(self, now: float) -> None:
         """Re-queue parked requests whose restore landed — their next
-        admission finds the restored pages LIVE and resumes past them."""
-        for item in list(self._held_restore):
-            if item[0] <= now:
-                self._held_restore.remove(item)
-                r = item[1]
-                r.spill_wait = -1.0
-                # arrival stays untouched: the hold is queueing delay,
-                # so the restore latency lands on this request's TTFT
-                self._requeue(r, now, cause="restore")
+        admission finds the restored pages LIVE and resumes past them.
+        Under a slack-aware scheduler the batch of due releases re-enters
+        tightest-budget first, so a same-tick admission race between two
+        resumed requests is settled in deadline order."""
+        due = [item for item in self._held_restore if item[0] <= now]
+        if not due:
+            return
+        if getattr(self, "_slack_aware", False):
+            due.sort(key=lambda it: (it[1].sacrifice_slack(), it[1].rid))
+        for item in due:
+            self._held_restore.remove(item)
+            r = item[1]
+            r.spill_wait = -1.0
+            # arrival stays untouched: the hold is queueing delay,
+            # so the restore latency lands on this request's TTFT
+            self._requeue(r, now, cause="restore")
 
     def _form_batch(self, now: float, *,
                     count_pending: bool) -> Tuple[Optional[FormedBatch], bool]:
@@ -873,17 +928,58 @@ class ServingLoop:
             self.st.padded += fpt * batch.padded_tokens
 
     def _preempt_for_decode(self, now: float) -> bool:
-        """Paged backends may need to evict the youngest pooled requests
-        to free KV pages for the older ones' next token (DESIGN.md §3).
-        The backend tears down its own state and returns the victims;
-        scheduling state is reset here and they re-enter the queue via
-        the requeue path (restart penalty, no stat double-count)."""
+        """Paged backends may need to evict pooled requests to free KV
+        pages for the survivors' next token (DESIGN.md §3; victim order
+        is youngest-first, or most-slack-first under a slack-aware
+        scheduler).  The backend tears down its own state and returns
+        the victims; scheduling state is reset here and they re-enter
+        the queue via the requeue path (restart penalty, no stat
+        double-count).
+
+        With ``slice_tokens = K`` set (DESIGN.md §8, arXiv 2406.13511),
+        a victim yields at the last K-aligned SLICE BOUNDARY instead of
+        restarting: generated tokens up to the boundary are promoted
+        into its prompt (``Request.sliced_tokens`` tracks the split),
+        so the requeued request re-PREFILLS the preserved work at
+        identical absolute positions — RoPE and causal attention see
+        the same stream, making the continuation bit-identical — and
+        resumes decoding where it left off.  Only the unaligned tail
+        past the boundary is recomputed.  Session turns never slice:
+        the next turn's prompt composition assumes an unsliced
+        transcript shape (``_unlock_next_turn``)."""
         victims = self.backend.decode_preempt(self.pool)
+        K = self.cfg.slice_tokens
         for r in victims:
             self.pool.remove(r)
             self.sched.release_decode(r)
-            r.generated = 0
-            r.first_token = -1.0
+            keep = (r.generated // K) * K if K else 0
+            sliced = keep > 0 and r.session_id is None
+            if sliced:
+                # promote the newly preserved span into the prompt;
+                # everything up to r.sliced_tokens was promoted by an
+                # earlier yield and already sits inside tokens[:prompt_len]
+                if r.tokens is not None:
+                    gen = np.asarray(self.backend.generated_tokens(r),
+                                     dtype=np.int32)
+                    r.tokens = np.concatenate([
+                        np.asarray(r.tokens[:r.prompt_len], dtype=np.int32),
+                        gen[r.sliced_tokens:keep]])
+                r.prompt_len += keep - r.sliced_tokens
+                r.sliced_tokens = keep
+                r.generated = keep
+                # first_token survives: the tokens that defined it are
+                # preserved, so TTFT stands and the preemption delay
+                # lands on TPOT — exactly what slack accounting wants
+                hook = getattr(self.backend, "on_slice_yield", None)
+                if hook is not None:
+                    hook(r, keep)
+                self.st.slice_yields += 1
+            else:
+                reset = getattr(self.backend, "on_preempt_reset", None)
+                if reset is not None:
+                    reset(r)
+                r.generated = 0
+                r.first_token = -1.0
             r.prefill_start = -1.0
             r.prefix_hit_tokens = 0       # re-matched at the next admission
             r.session_hit_tokens = 0
@@ -891,8 +987,10 @@ class ServingLoop:
             self._requeue(r, r.arrival, cause="preempt", at=now)
             self.st.preempts += 1
             if self.tracer.enabled:
-                self.tracer.instant("decode", "preempt", now,
-                                    cat="preempt", args={"rid": r.rid})
+                self.tracer.instant(
+                    "decode", "slice-yield" if sliced else "preempt", now,
+                    cat="preempt",
+                    args={"rid": r.rid, "kept_tokens": keep})
         return bool(victims)
 
     def _advance_pool(self, end: float) -> None:
@@ -1019,11 +1117,18 @@ class ServingLoop:
                           "padding_fraction": batch.padding_fraction,
                           "homogeneity": batch.homogeneity})
             for r in batch.requests:
-                r.first_token = end
-                r.generated = 1
-                if r.ledger is not None:
-                    r.ledger.mark_first(end)
-                self._note_first(r)
+                # prefill's last position predicts one token: for a
+                # fresh request that's the FIRST token (0 -> 1); for a
+                # slice-yield resume (generated == sliced_tokens > 0)
+                # it's the next token after the preserved span —
+                # first_token was stamped on the original pass and
+                # stands, so the preemption delay shows up in TPOT
+                r.generated += 1
+                if r.first_token < 0:
+                    r.first_token = end
+                    if r.ledger is not None:
+                        r.ledger.mark_first(end)
+                    self._note_first(r)
                 if r.generated >= r.max_new_tokens \
                         or not self.backend.supports_decode:
                     r.finished = end

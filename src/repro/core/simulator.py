@@ -152,6 +152,10 @@ class CostModelBackend:
 
     prefill_needs_slots = False
     supports_decode = True
+    # armed by the ServingLoop when the scheduler is slack-aware: a
+    # CLOCK-FREE key (Request -> seconds) preferring the victim with
+    # the most remaining deadline slack (DESIGN.md §8)
+    slack_of = None
 
     def __init__(self, cost: CostModel, *, kv_budget: float,
                  chunk_tokens: Optional[int] = None, paged: bool = False,
@@ -266,7 +270,11 @@ class CostModelBackend:
         return min(r.prompt_len + 1, self._cap)
 
     def _decode_tokens(self, r: Request) -> int:
-        return min(r.prompt_len + r.generated, self._cap)
+        # sliced_tokens were PROMOTED into the prompt by a slice-yield
+        # (serving_loop._preempt_for_decode): they are already counted
+        # inside prompt_len, so only the post-promotion generation adds
+        # physical context on top
+        return min(r.prompt_len + r.generated - r.sliced_tokens, self._cap)
 
     def _prompt_tokens(self, r: Request):
         return r.tokens[:r.prompt_len]
@@ -283,7 +291,16 @@ class CostModelBackend:
             return []
         return paging.extend_for_decode(self.alloc, pool,
                                         self._decode_tokens,
-                                        cache=self.retention)
+                                        cache=self.retention,
+                                        slack_of=self.slack_of)
+
+    def on_slice_yield(self, req: Request, keep: int) -> None:
+        # the synthetic id stream (generated_tokens) is prefix-stable:
+        # truncating req.generated back to ``keep`` IS the truncation
+        pass
+
+    def on_preempt_reset(self, req: Request) -> None:
+        pass
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         # same gate as the real engine (cfg.chunkable_prefill) so the two
@@ -336,7 +353,10 @@ class CostModelBackend:
         prompt plus generated[:-1]."""
         if req.tokens is None:
             return None
-        gen = self.generated_tokens(req)[:max(req.generated - 1, 0)]
+        # generated[:sliced_tokens] already live inside tokens[:prompt_len]
+        # (slice-yield promotion) — exclude them or they'd count twice
+        gen = self.generated_tokens(req)[req.sliced_tokens:
+                                         max(req.generated - 1, 0)]
         return np.concatenate(
             [np.asarray(req.tokens[:req.prompt_len], np.int32), gen])
 
@@ -380,6 +400,7 @@ class Simulator:
                  host_pool_tokens: Optional[int] = None,
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
+                 slice_tokens: Optional[int] = None,
                  recorder=None, tracer=None):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
@@ -409,7 +430,8 @@ class Simulator:
             spill_dtype=spill_dtype)
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
-            restart_penalty=restart_penalty, tick=tick),
+            restart_penalty=restart_penalty, tick=tick,
+            slice_tokens=slice_tokens),
             recorder=recorder, tracer=tracer)
 
     def run(self, requests: List[Request],

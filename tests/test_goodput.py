@@ -1,0 +1,415 @@
+"""SLO-class goodput scheduling (PR 9, DESIGN.md §8).
+
+The tentpole claims under test:
+
+* the slack model anchors every deadline on the ledger's FIRST arrival
+  (``Request.t0``) — OOM-restart and restore-hold requeues overwrite
+  ``Request.arrival`` and must not silently extend a deadline;
+* the GoodputScheduler orders the queue by budget-normalized urgency
+  (+ short-job bonus), force-includes winnable nearly-late requests,
+  and demotes past-deadline ones that can no longer earn goodput;
+* slice-boundary preemption (arXiv 2406.13511): a mid-generation yield
+  at a multiple of K decode iterations preserves the generated prefix —
+  the resumed request's token ids are BIT-IDENTICAL to an uncontended
+  run, on BOTH execution backends;
+* engine/sim parity extends to the new decision surfaces: formed
+  batches, preemption victims (the requeue order), and slice-yield
+  decisions are identical across backends under the GoodputScheduler.
+"""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (BucketServeScheduler, GoodputScheduler, GlobalMonitor,
+                        MemoryBudget, SchedulerConfig, TaskType)
+from repro.core.batcher import DynamicBatchController
+from repro.core.engine import ServingEngine
+from repro.core.request import Request
+from repro.core.simulator import A100X4, CostModel, Simulator
+from repro.core.telemetry import LatencyLedger
+from repro.models import transformer as tfm
+
+BUDGET = MemoryBudget(hbm_bytes_per_device=2 ** 30, n_devices=1,
+                      weight_bytes=0)
+CFG = get_smoke_config("qwen3-14b", max_seq_len=128)
+
+
+# ------------------------------------------------------ slack model ------
+class TestSlackModel:
+    def _started(self, **kw) -> Request:
+        r = Request(rid=0, prompt_len=16, max_new_tokens=8, arrival=1.0, **kw)
+        r.ledger = LatencyLedger()
+        r.ledger.start(1.0)
+        return r
+
+    def test_t0_survives_requeue_arrival_overwrite(self):
+        r = self._started()
+        r.arrival = 7.5                      # OOM restart penalty path
+        assert r.t0() == 1.0
+        assert r.ttft_slack(2.0) == pytest.approx(r.slo_ttft - 1.0)
+        r.first_token = 2.0
+        r.finished = 4.0
+        assert r.ttft() == pytest.approx(1.0)      # NOT 2.0 - 7.5
+        assert r.e2e() == pytest.approx(3.0)
+
+    def test_slack_switches_phase_at_first_token(self):
+        r = self._started(slo_ttft=2.0, slo_tpot=0.1)
+        assert r.slack(2.0) == pytest.approx(1.0)        # TTFT phase
+        r.first_token = 2.0
+        r.generated = 5
+        # 4 post-first tokens allowed 0.1 s each, 1 s elapsed since first
+        assert r.slack(3.0) == pytest.approx(0.4 - 1.0)
+
+    def test_sacrifice_slack_is_clock_free(self):
+        r = self._started(slo_ttft=2.0, slo_tpot=0.1)
+        assert r.sacrifice_slack() == pytest.approx(2.0)
+        r.first_token = 2.0
+        r.generated = 6
+        assert r.sacrifice_slack() == pytest.approx(0.1 * 2)
+        # depends only on budgets and token counts — no ``now`` argument
+
+
+# ----------------------------------------------- queue ordering ----------
+def _sched(cls=GoodputScheduler, **kw):
+    return cls(CFG, BUDGET, SchedulerConfig(**kw))
+
+
+def _req(rid, arrival, *, cls="chat", slo_ttft=2.0, slo_tpot=0.2,
+         prompt=64, new=32):
+    return Request(rid=rid, prompt_len=prompt, max_new_tokens=new,
+                   arrival=arrival, task_type=TaskType.ONLINE, cls=cls,
+                   slo_ttft=slo_ttft, slo_tpot=slo_tpot)
+
+
+class TestGoodputOrdering:
+    def test_urgency_is_budget_normalized(self):
+        """A chat request 1 s into its 2 s budget outranks a batch job
+        30 s into its 120 s budget — arrival order would invert this."""
+        s = _sched()
+        batch = _req(0, 0.0, cls="batch", slo_ttft=120.0, slo_tpot=2.0)
+        chat = _req(1, 29.0)
+        s.on_arrival(batch, 0.0)
+        s.on_arrival(chat, 29.0)
+        b = s.next_prefill_batch(30.0)
+        assert [r.rid for r in b.requests] == [1, 0]
+
+    def test_short_job_bonus_breaks_ties(self):
+        s = _sched()
+        long = _req(0, 0.0, new=512)
+        short = _req(1, 0.0, new=4)
+        s.on_arrival(long, 0.0)
+        s.on_arrival(short, 0.0)
+        assert [r.rid for r in s.next_prefill_batch(0.5).requests] == [1, 0]
+
+    def test_forced_tier_overrides_score(self):
+        """A winnable nearly-late request (slack under force_frac of its
+        budget) jumps a higher-scoring fresh one."""
+        s = _sched()
+        fresh = _req(0, 1.4, new=4)          # short-job bonus, young
+        late = _req(1, 0.0, new=512)         # slack 0.5 s = 0.25 * budget
+        s.on_arrival(fresh, 1.4)
+        s.on_arrival(late, 0.0)
+        now = 1.5
+        assert s._tier(late, now) == 1 and s._tier(fresh, now) == 0
+        assert [r.rid for r in s.next_prefill_batch(now).requests] == [1, 0]
+
+    def test_past_deadline_demotes_below_winnable(self):
+        """A request that can no longer meet its TTFT earns no goodput:
+        it yields the front of the queue to winnable work (but is still
+        served — demoted, never dropped)."""
+        s = _sched()
+        hopeless = _req(0, 0.0)              # 3 s old on a 2 s budget
+        fresh = _req(1, 2.9)
+        s.on_arrival(hopeless, 0.0)
+        s.on_arrival(fresh, 2.9)
+        now = 3.0
+        assert s._tier(hopeless, now) == -1
+        batch = s.next_prefill_batch(now)
+        assert [r.rid for r in batch.requests] == [1, 0]
+
+    def test_min_slack_gauge_feeds_monitor(self):
+        s = _sched()
+        s.on_arrival(_req(0, 0.0), 0.0)
+        s.on_arrival(_req(1, 0.5), 0.5)
+        assert s.monitor.min_slack_s == math.inf
+        s.next_prefill_batch(1.0)            # chat: 2.0 - (1.0 - 0.0)
+        assert s.monitor.min_slack_s == pytest.approx(1.0)
+        assert s.monitor.snapshot(1.0).min_slack_s == pytest.approx(1.0)
+
+    def test_class_goodput_rolling_window(self):
+        m = GlobalMonitor()
+        for ok in (True, True, False):
+            m.on_retire("chat", {"queue": 0.1}, slo_met=ok)
+        m.on_retire("batch", {"queue": 0.1}, slo_met=True)
+        snap = m.snapshot(1.0)
+        assert snap.class_goodput["chat"] == pytest.approx(2 / 3)
+        assert snap.class_goodput["batch"] == pytest.approx(1.0)
+
+    def test_low_min_slack_relieves_admission_backpressure(self):
+        """The controller's restore-backlog throttle relaxes when the
+        queue's minimum slack is tight — holding admissions back is how
+        deadlines get missed under pressure."""
+        ctl = DynamicBatchController(CFG, BUDGET)
+        args = dict(restore_pages=8, restore_backlog_bytes=1 << 24)
+        full = ctl.admission_pressure_tokens(**args)
+        assert ctl.admission_pressure_tokens(
+            **args, min_slack=math.inf) == full
+        relieved = ctl.admission_pressure_tokens(**args, min_slack=0.0)
+        assert relieved <= full
+
+
+# -------------------------------------------- t0 across requeues ---------
+class _FirstArrivalRecorder(GoodputScheduler):
+    """Records the clock at each rid's FIRST on_arrival and every
+    requeue — the ground truth t0() must agree with."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.first_seen = {}
+        self.requeued = []
+
+    def on_arrival(self, r, now, requeue=False):
+        if requeue:
+            self.requeued.append(r.rid)
+        else:
+            self.first_seen.setdefault(r.rid, now)
+        super().on_arrival(r, now, requeue=requeue)
+
+
+class TestT0AcrossRequeues:
+    def test_oom_preempt_requeue_keeps_deadline_anchor(self):
+        """Tight paged pool forces mid-decode preemptions; the restart
+        penalty overwrites ``arrival`` but every deadline stays anchored
+        on the first arrival."""
+        sched = _FirstArrivalRecorder(CFG, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=32))
+        sim = Simulator(sched, CostModel(CFG, A100X4), mode="disagg",
+                        decode_slot_cap=4, paged=True, page_size=32,
+                        kv_pool_tokens=5 * 32, cache_len=128)
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=i, prompt_len=int(rng.integers(20, 40)),
+                        max_new_tokens=int(rng.integers(20, 40)),
+                        arrival=0.0, task_type=TaskType.OFFLINE)
+                for i in range(6)]
+        res = sim.run(reqs)
+        assert len(res.finished()) == 6
+        assert res.preempt_events > 0 and sched.requeued
+        moved = [r for r in reqs if r.arrival != 0.0]
+        assert moved, "restart penalty never shifted an arrival"
+        for r in reqs:
+            assert r.t0() == pytest.approx(sched.first_seen[r.rid])
+            assert r.ttft() == pytest.approx(
+                r.first_token - sched.first_seen[r.rid])
+
+    def test_restore_hold_keeps_deadline_anchor(self):
+        """Session turns parked on a host->device restore re-enter the
+        queue through the same funnel; the hold lands on TTFT (anchored
+        at first arrival), never resets it."""
+        from repro.data.workload import WorkloadSpec, generate
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=1024)
+        sched = _FirstArrivalRecorder(cfg, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=128))
+        sim = Simulator(sched, CostModel(cfg, A100X4), mode="disagg",
+                        decode_slot_cap=4, paged=True, page_size=128,
+                        kv_pool_tokens=12 * 128, cache_len=1024,
+                        session_ttl=1000.0, host_pool_tokens=64 * 128)
+        spec = WorkloadSpec(dataset="alpaca", rps=1e6, sessions=3, turns=4,
+                            utterance_tokens=200, max_new_tokens=8, seed=7,
+                            task_type=TaskType.OFFLINE,
+                            max_model_len=cfg.max_seq_len,
+                            vocab_size=cfg.vocab_size)
+        reqs = generate(spec)
+        res = sim.run(reqs)
+        assert len(res.finished()) == len(reqs)
+        assert res.spill_hold_events > 0
+        for r in reqs:
+            assert r.t0() == pytest.approx(sched.first_seen[r.rid])
+            assert r.first_token >= sched.first_seen[r.rid]
+            assert r.ttft() < math.inf
+
+
+# --------------------------------------- slice-boundary preemption -------
+def _preempt_workload(n=6, seed=3, new_lo=20, new_hi=40):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt_len=int(rng.integers(20, 40)),
+                    max_new_tokens=int(rng.integers(new_lo, new_hi)),
+                    arrival=0.0, task_type=TaskType.OFFLINE)
+            for i in range(n)]
+
+
+class TestSlicePreemption:
+    def _engine(self, params, *, pool_tokens, slice_tokens=None):
+        sched = BucketServeScheduler(CFG, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=32))
+        return ServingEngine(CFG, params, sched, max_slots=4,
+                             cache_len=128, paged=True, page_size=32,
+                             kv_pool_tokens=pool_tokens,
+                             slice_tokens=slice_tokens)
+
+    def test_engine_yield_resume_bit_identical(self):
+        """Pool exhaustion forces mid-generation yields at slice
+        boundaries; every resumed request's output stream equals the
+        uncontended reference bit for bit — generated work survives."""
+        params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+        eng = self._engine(params, pool_tokens=5 * 32, slice_tokens=4)
+        reqs = _preempt_workload()
+        eng.submit(reqs)
+        assert len(eng.run(max_wall_s=600)) == 6
+        assert eng.result.slice_yields > 0
+        sliced = [r for r in reqs if r.sliced_tokens > 0]
+        assert sliced, "no request ever yielded at a slice boundary"
+        for r in sliced:
+            assert r.sliced_tokens % 4 == 0
+            assert r.first_token >= 0          # first token NOT reset
+
+        ref = self._engine(params, pool_tokens=None)
+        ref.submit([dataclasses.replace(r, arrival=0.0, generated=0,
+                                        prompt_len=r.prompt_len
+                                        - r.sliced_tokens,
+                                        tokens=None if r.tokens is None
+                                        else r.tokens[:r.prompt_len
+                                                      - r.sliced_tokens],
+                                        sliced_tokens=0, first_token=-1.0,
+                                        prefill_start=-1.0, finished=-1.0)
+                    for r in reqs])
+        ref.run(max_wall_s=600)
+        for r in reqs:
+            assert len(eng.outputs[r.rid]) == r.max_new_tokens
+            assert eng.outputs[r.rid] == ref.outputs[r.rid], f"rid={r.rid}"
+
+    def test_sim_slice_yield_promotes_generated_prefix(self):
+        """Cost-model backend: a slice yield promotes the generated
+        prefix into the prompt (same contract as the engine) and the
+        stream continues bit-identically from the kept boundary."""
+        sched = BucketServeScheduler(CFG, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=32))
+        sim = Simulator(sched, CostModel(CFG, A100X4), mode="disagg",
+                        decode_slot_cap=4, paged=True, page_size=32,
+                        kv_pool_tokens=5 * 32, cache_len=128,
+                        slice_tokens=4)
+        reqs = _preempt_workload()
+        for r in reqs:
+            r.materialize_tokens(CFG.vocab_size)
+        orig_prompt = {r.rid: r.prompt_len for r in reqs}
+        res = sim.run(reqs)
+        assert len(res.finished()) == 6
+        assert res.slice_yields > 0
+        sliced = [r for r in reqs if r.sliced_tokens > 0]
+        assert sliced
+        for r in sliced:
+            assert r.prompt_len == orig_prompt[r.rid] + r.sliced_tokens
+            # the promoted prompt suffix IS the generated stream prefix
+            stream = np.asarray(sim.backend.generated_tokens(r), np.int32)
+            np.testing.assert_array_equal(
+                r.tokens[orig_prompt[r.rid]:r.prompt_len],
+                stream[:r.sliced_tokens])
+        for r in reqs:
+            assert r.generated == r.max_new_tokens
+
+    def test_session_turns_never_sliced(self):
+        """Slice yields promote generated ids into the prompt, which
+        would corrupt a session transcript — session turns always take
+        the reset path."""
+        from repro.data.workload import WorkloadSpec, generate
+        cfg = get_smoke_config("qwen3-14b", max_seq_len=1024)
+        sched = BucketServeScheduler(cfg, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=128))
+        sim = Simulator(sched, CostModel(cfg, A100X4), mode="disagg",
+                        decode_slot_cap=4, paged=True, page_size=128,
+                        kv_pool_tokens=12 * 128, cache_len=1024,
+                        session_ttl=1000.0, slice_tokens=4)
+        spec = WorkloadSpec(dataset="alpaca", rps=1e6, sessions=3, turns=4,
+                            utterance_tokens=200, max_new_tokens=16, seed=7,
+                            task_type=TaskType.OFFLINE,
+                            max_model_len=cfg.max_seq_len,
+                            vocab_size=cfg.vocab_size)
+        reqs = generate(spec)
+        res = sim.run(reqs)
+        assert len(res.finished()) == len(reqs)
+        for r in reqs:
+            assert r.sliced_tokens == 0
+
+
+# ----------------------------------------------- backend parity ----------
+def _record_dispatched(backend, log):
+    """Batch compositions that actually DISPATCH (survive admission) —
+    same parity surface as tests/test_kv_spill.py."""
+    orig = backend.prefill_chunk
+
+    def rec(job, idx, _orig=orig, _log=log):
+        if idx == 0:
+            _log.append(tuple(r.rid for r in job.batch.requests))
+        return _orig(job, idx)
+
+    backend.prefill_chunk = rec
+
+
+def _record_victims(backend, log):
+    """Preemption victims, at the decision point.  (Requeue order as
+    seen by the scheduler is NOT parity-comparable: slot/page clamp
+    requeues recur every tick while pages are short, and tick cadence
+    is a clock property.)"""
+    orig = backend.decode_preempt
+
+    def rec(pool, _orig=orig, _log=log):
+        victims = _orig(pool)
+        if victims:
+            _log.append(tuple(v.rid for v in victims))
+        return victims
+
+    backend.decode_preempt = rec
+
+
+class TestGoodputBackendParity:
+    """Engine vs cost model under the GoodputScheduler with a pool tight
+    enough to preempt: identical dispatched batches, identical requeue
+    (victim) order, identical slice-yield outcomes."""
+
+    def _sched(self):
+        return GoodputScheduler(CFG, BUDGET, SchedulerConfig(
+            max_batch=4, memory_model="paged", page_size=32))
+
+    def _workload(self):
+        # uniform max_new keeps tier/score ordering clock-independent
+        rng = np.random.default_rng(11)
+        return [Request(rid=i, prompt_len=int(rng.integers(20, 40)),
+                        max_new_tokens=24, arrival=0.0,
+                        task_type=TaskType.ONLINE) for i in range(6)]
+
+    def test_batches_victims_and_slices_match(self):
+        sched_sim = self._sched()
+        sim = Simulator(sched_sim, CostModel(CFG, A100X4), mode="disagg",
+                        decode_slot_cap=4, paged=True, page_size=32,
+                        kv_pool_tokens=5 * 32, cache_len=128,
+                        slice_tokens=4)
+        disp_sim, vic_sim = [], []
+        _record_dispatched(sim.backend, disp_sim)
+        _record_victims(sim.backend, vic_sim)
+        res_sim = sim.run(self._workload())
+        assert len(res_sim.finished()) == 6
+        assert res_sim.preempt_events > 0
+
+        params = tfm.init_params(CFG, jax.random.PRNGKey(0))
+        sched_eng = self._sched()
+        eng = ServingEngine(CFG, params, sched_eng, max_slots=4,
+                            cache_len=128, paged=True, page_size=32,
+                            kv_pool_tokens=5 * 32, slice_tokens=4)
+        disp_eng, vic_eng = [], []
+        _record_dispatched(eng.backend, disp_eng)
+        _record_victims(eng.backend, vic_eng)
+        eng.submit(self._workload())
+        assert len(eng.run(max_wall_s=600)) == 6
+        res_eng = eng.result
+
+        assert disp_sim == disp_eng
+        assert vic_sim == vic_eng and vic_sim
+        assert res_sim.preempt_events == res_eng.preempt_events
+        assert res_sim.slice_yields == res_eng.slice_yields > 0
+        assert {r.rid: (r.sliced_tokens, r.generated)
+                for r in res_sim.requests} == \
+               {r.rid: (r.sliced_tokens, r.generated)
+                for r in res_eng.requests}
