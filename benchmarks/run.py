@@ -23,9 +23,9 @@ import subprocess
 import sys
 import time
 
-from . import (arch_sweep, common, fig5_capacity, fig5_offline, fig5_slo,
-               fig6_overhead, kv_quant, kv_spill, prefix_cache, roofline,
-               session_reuse, trace_replay, waste_model)
+from . import (arch_sweep, chaos, common, fig5_capacity, fig5_offline,
+               fig5_slo, fig6_overhead, kv_quant, kv_spill, prefix_cache,
+               roofline, session_reuse, trace_replay, waste_model)
 
 TABLES = {
     "fig5_offline": fig5_offline.main,     # Fig. 5a/5b
@@ -39,6 +39,7 @@ TABLES = {
     "session_reuse": session_reuse.main,   # beyond-paper: session resume
     "kv_spill": kv_spill.main,             # beyond-paper: host spill tier
     "trace_replay": trace_replay.main,     # beyond-paper: burst tails
+    "chaos": chaos.main,                   # beyond-paper: fault storm
     "roofline": roofline.main,             # §Roofline (dry-run derived)
 }
 

@@ -88,6 +88,7 @@ from repro.models.attention import dequantize_kv_int4, quantize_kv_int4
 from repro.models.config import BLOCK_ATTN, BLOCK_MOE, ModelConfig
 from . import paging
 from .batcher import FormedBatch
+from .faults import FaultInjector
 from .prefix_cache import PrefixCache
 from .request import Request
 from .retention import KvRetention, maintain_backend
@@ -446,7 +447,19 @@ class JaxEngineBackend:
     def begin(self, requests: Sequence[Request]) -> None:
         for r in requests:
             r.materialize_tokens(self.cfg.vocab_size)
-            self.outputs[r.rid] = []
+            if r.sliced_tokens > 0:
+                # cold resume of a slice-promoted request (checkpointed
+                # drain, core/recovery.py): the promoted ids are the
+                # LAST sliced_tokens of the prompt — seed the output
+                # list with them so generated-token indexing
+                # (_transcript_tokens, slice yields) keeps its absolute
+                # alignment on a backend that never ran the original
+                # decode steps
+                self.outputs[r.rid] = [
+                    int(t) for t in
+                    r.tokens[r.prompt_len - r.sliced_tokens:r.prompt_len]]
+            else:
+                self.outputs[r.rid] = []
         self.clock.start()
 
     def kv_budget_tokens(self) -> float:
@@ -520,6 +533,31 @@ class JaxEngineBackend:
 
     def on_preempt_reset(self, req: Request) -> None:
         self.outputs[req.rid] = []       # regenerated after re-prefill
+
+    # ------------------------------------------- fault/drain teardown -----
+    def abort_prefill(self, req: Request) -> None:
+        """A mid-prefill request leaves before its KV enters the slot
+        pool (prefill-job abandon, checkpointed drain): free its
+        admission-reserved pages outright.  No slot was taken yet —
+        slots are assigned in ``_finish_prefill``."""
+        if self.paged:
+            self.alloc.release(req.rid)
+            self._bt.forget(req.rid)
+
+    def evict_request(self, req: Request) -> None:
+        """Tear down a pooled request's slot + pages WITHOUT retention
+        registration (decode-pool kill / drain): its partial KV never
+        becomes a radix path.  ``outputs`` survives — the loop still
+        reads ``generated_tokens`` to promote the preserved slice."""
+        slot = self._slot_of.pop(req.rid, None)
+        if slot is not None:
+            self.slot_req[slot] = None
+        if self.paged:
+            self.alloc.release(req.rid)
+            if slot is not None:
+                self._bt.clear(slot, req.rid)
+            else:
+                self._bt.forget(req.rid)
 
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         total = max(batch.pad_to, 8)     # min real-tensor prompt width
@@ -825,7 +863,9 @@ class ServingEngine:
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
                  slice_tokens: Optional[int] = None,
-                 recorder=None, tracer=None):
+                 recorder=None, tracer=None,
+                 fault_plan=None, recovery=None,
+                 restore_timeout: float = 30.0):
         self.cfg = cfg
         self.params = params
         self.sched = scheduler
@@ -836,10 +876,15 @@ class ServingEngine:
             kv_pool_tokens=kv_pool_tokens, prefix_cache=prefix_cache,
             session_ttl=session_ttl, host_pool_tokens=host_pool_tokens,
             spill_bw=spill_bw, spill_dtype=spill_dtype)
+        faults = None
+        if fault_plan is not None and fault_plan.any_armed:
+            faults = FaultInjector(fault_plan)
+        self.faults = faults
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode="disagg", decode_slot_cap=max_slots,
-            slice_tokens=slice_tokens), recorder=recorder,
-            tracer=tracer)
+            slice_tokens=slice_tokens, restore_timeout=restore_timeout),
+            recorder=recorder, tracer=tracer,
+            faults=faults, recovery=recovery)
         self.result: Optional[ServeResult] = None
 
     @property

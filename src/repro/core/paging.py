@@ -284,6 +284,24 @@ class BlockAllocator:
         self._free_host.append(hslot)
         return True
 
+    def restore_cancel(self, hslot: int) -> bool:
+        """Abort a restore in flight (channel hard-fault, recovery shed
+        — core/recovery.py): the reserved device page returns to the
+        free list and the slot's content is back AT REST — the copy
+        never landed, so the host bytes are still the truth.  Inverse
+        of ``restore_begin``; both two-tier invariants hold across the
+        round trip.  False if no restore was in flight."""
+        if hslot not in self._restoring:
+            return False
+        page = self._restoring.pop(hslot)
+        assert self._pins.get(page) == 1 and self._refs.get(page) == 1, \
+            f"reserved restore page {page} grew references mid-flight"
+        del self._pins[page]
+        freed = self._unref(page)
+        assert freed, "reserved restore page did not free on cancel"
+        self._spilled[hslot] = None
+        return True
+
     def drop_spilled(self, hslot: int) -> bool:
         """Destroy spilled content (host-budget LRU, expiry of a demoted
         session): the slot returns to the host free list.  A slot with a

@@ -84,6 +84,17 @@ class Request:
     finished: float = -1.0
     generated: int = 0
     dropped: bool = False
+    # --- fault/recovery bookkeeping (core/faults.py, core/recovery.py) ---
+    # consecutive faults this request absorbed since its last clean
+    # chunk (reset on success); reaching RecoveryPolicy.quarantine_after
+    # marks it poisoned and it is dropped with a closed ledger rather
+    # than allowed to wedge the loop
+    fault_streak: int = 0
+    quarantined: bool = False
+    # drain/resume (core/recovery.py LoopCheckpoint): original ledger t0
+    # carried across the checkpoint so deadlines do NOT reset on the
+    # cold loop — ``run()`` re-anchors the fresh ledger here (< 0: none)
+    t0_anchor: float = -1.0
 
     @property
     def S(self) -> int:

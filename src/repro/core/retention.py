@@ -93,6 +93,13 @@ class RetentionStats:
     # ---- quantized spill tier (byte denomination) ----
     bytes_spilled: int = 0       # COMPRESSED bytes moved device->host
     bytes_restored: int = 0      # COMPRESSED bytes moved host->device
+    # ---- fault/recovery plane (core/faults.py, core/recovery.py) ----
+    restore_stalls: int = 0      # injected channel stalls absorbed
+    restore_retries: int = 0     # channel hard-faults retried (backoff)
+    restore_failures: int = 0    # restore runs abandoned after retries
+    restore_sheds: int = 0       # runs shed by the deadline-slack rule
+    restore_timeouts: int = 0    # held requests unparked by the timeout
+    corruptions: int = 0         # host-slot checksum mismatches caught
 
 
 @dataclasses.dataclass
@@ -150,6 +157,14 @@ class KvRetention:
         # class budget tolerates a cold resume best (largest slo_ttft)
         # instead of the soonest-expiring one
         self.slack_aware = False
+        # fault-injection / recovery seams (core/faults.py §9): armed by
+        # the ServingLoop AFTER backend.begin (backends rebuild retention
+        # there).  ``faults`` draws restore-channel stall / hard-error /
+        # host-corruption decisions; ``recovery`` bounds the retries and
+        # carries the deadline-slack shed rule.  Both None in a
+        # fault-free run — every new branch below is skipped.
+        self.faults = None
+        self.recovery = None
         self.prefix = PrefixCache(page_size)
         self.prefix.on_host_drop = self._on_host_drop
         # event-timeline seam (core/telemetry.py): the ServingLoop
@@ -175,6 +190,11 @@ class KvRetention:
         # system livelocks copying instead of serving.  The expiry is a
         # leak backstop for requests that never come back.
         self._reserved: Dict[int, Tuple[float, frozenset]] = {}
+        # per-slot integrity checksums stamped at SPILL time and
+        # verified when the restore channel next READS the slot — a
+        # corrupted host copy is destroyed (cold re-prefill) instead of
+        # ever being copied back and served
+        self._checksums: Dict[int, int] = {}
         # earliest expires_at across live entries (inf when none): the
         # per-iteration TTL tick early-returns on it, so steady-state
         # serving pays O(1) per tick, not O(live sessions)
@@ -182,6 +202,7 @@ class KvRetention:
 
     def _on_host_drop(self, hslot: int, revived: bool) -> None:
         """PrefixCache destroyed/revived a spilled node's host copy."""
+        self._checksums.pop(hslot, None)
         if self.copier is not None:
             self.copier.drop(hslot)
         if not revived:
@@ -191,10 +212,35 @@ class KvRetention:
         """Destroy a session tail's host copy — the ONE teardown path
         (slot back to the allocator, copier staging discarded, drop
         counted) for every session-side site."""
+        self._checksums.pop(hslot, None)
         alloc.drop_spilled(hslot)
         if self.copier is not None:
             self.copier.drop(hslot)
         self.stats.spill_drops += 1
+
+    # -------------------------------------------- host-slot integrity --
+    @staticmethod
+    def _expected_checksum(hslot: int) -> int:
+        """Model-level per-slot checksum: a pure function of the slot,
+        identical in both backends (the engine's real bytes are
+        bit-exact across spill/restore by the PR 5 copier tests, so the
+        model checksum tracks the DECISION — was the content rotted —
+        which is the parity surface)."""
+        return (hslot * 0x9E3779B1 + 0x7F4A7C15) & 0xFFFFFFFF
+
+    def _stamp_checksum(self, hslot: int) -> None:
+        """At spill time: record the slot checksum.  An injected
+        ``host_corrupt`` fault rots the stored value — bit-rot at rest,
+        caught only when the slot is next read."""
+        chk = self._expected_checksum(hslot)
+        if self.faults is not None and self.faults.fire("host_corrupt"):
+            chk ^= 1
+        self._checksums[hslot] = chk
+
+    def _checksum_ok(self, hslot: int) -> bool:
+        return self._checksums.get(
+            hslot, self._expected_checksum(hslot)) \
+            == self._expected_checksum(hslot)
 
     # ------------------------------------------------------------ queries --
     @property
@@ -433,60 +479,152 @@ class KvRetention:
         ready = -1.0
         new = 0
         protect = list(pages)
+        planned: List[Tuple[int, int]] = []      # (hslot, page) copies
         broken = False
         for node in cont:
             if node.restoring:
                 ready = max(ready, node.ready_at)
                 protect.append(node.page)
                 continue
+            if not self._checksum_ok(node.hslot):
+                # bit-rot at rest: destroy the node (and its — equally
+                # spilled — subtree) before any copy moves garbage; the
+                # request degrades to its live hit and re-prefills
+                self.stats.corruptions += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "restore-channel", "corrupt-slot", self._now,
+                        cat="fault", args={"hslot": node.hslot})
+                self.prefix._drop_spilled_subtree(alloc, node)
+                self.prefix.drop_spilled_node(alloc, node)
+                broken = True
+                break
             page = self._reserve_page(alloc, node.hslot, protect)
             if page is None:
                 broken = True
                 break
-            if self.copier is not None:
-                self.copier.restore(node.hslot, page)
             self.prefix.mark_restoring(node, page, math.inf)
             self._restores.append((node.hslot, "node", node))
+            planned.append((node.hslot, page))
             protect.append(page)
             new += 1
         if (e is not None and e.tail_hslot is not None
                 and e.tail_page is None and not broken):
-            page = self._reserve_page(alloc, e.tail_hslot, protect)
-            if page is not None:
-                if self.copier is not None:
-                    self.copier.restore(e.tail_hslot, page)
-                e.tail_page = page
-                self._restores.append((e.tail_hslot, "tail", e.sid))
-                protect.append(page)
-                new += 1
+            if not self._checksum_ok(e.tail_hslot):
+                # the tail tokens are lost to bit-rot: the entry
+                # survives truncated to its page-aligned transcript
+                # (the radix still backs that); an entry with nothing
+                # left drops entirely
+                self.stats.corruptions += 1
+                h = e.tail_hslot
+                e.tail_hslot = None
+                e.tail_ready = -1.0
+                self._drop_host_slot(alloc, h)
+                e.path = e.path[:e.full_tokens]
+                if e.full_tokens == 0:
+                    self._drop_session(alloc, e.sid, expired=False)
+            else:
+                page = self._reserve_page(alloc, e.tail_hslot, protect)
+                if page is not None:
+                    e.tail_page = page
+                    self._restores.append((e.tail_hslot, "tail", e.sid))
+                    planned.append((e.tail_hslot, page))
+                    protect.append(page)
+                    new += 1
         elif e is not None and e.tail_hslot is not None \
                 and e.tail_page is not None:
             ready = max(ready, e.tail_ready)          # already in flight
             protect.append(e.tail_page)
         if new:
-            # one PCIe channel: this run queues behind in-flight copies
-            ch_start = max(self._now, self._restore_free)
-            done = ch_start + new * self.spill_seconds_per_page
-            self._restore_free = done
-            if self.tracer.enabled:
-                self.tracer.complete(
-                    "restore-channel", f"restore x{new}", ch_start,
-                    new * self.spill_seconds_per_page, cat="restore",
-                    args={"pages": new, "rid": req.rid})
-            self.stats.restore_seconds += new * self.spill_seconds_per_page
-            for hslot, kind, obj in self._restores[-new:]:
-                if kind == "node":
-                    obj.ready_at = done
-                else:                             # tail (only if tail_new)
-                    e.tail_ready = done
-            self._next_restore = min(self._next_restore, done)
-            ready = max(ready, done)
+            # fault plane (core/faults.py): one stall draw + a bounded
+            # retry loop of hard-error draws per dispatched run.  Draws
+            # happen BEFORE any copy is issued, so a failed run cancels
+            # cleanly (reserved pages return, slots back at rest).
+            stall = 0.0
+            attempts = 0
+            failed = False
+            if self.faults is not None:
+                if self.faults.fire("restore_stall"):
+                    stall = self.faults.plan.stall_s
+                    self.stats.restore_stalls += 1
+                max_r = self.recovery.max_retries \
+                    if self.recovery is not None else 0
+                while self.faults.fire("restore_error"):
+                    attempts += 1
+                    if attempts > max_r:
+                        failed = True
+                        break
+            if failed:
+                self._cancel_new_restores(alloc, new, e)
+                self.stats.restore_failures += 1
+                self.stats.restore_retries += attempts - 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "restore-channel", "restore-failed", self._now,
+                        cat="fault", args={"pages": new, "rid": req.rid})
+                new = 0
+            else:
+                # each retry re-sends the whole run (burns the channel);
+                # backoff gaps sit between sends
+                xfer = (attempts + 1) * new * self.spill_seconds_per_page
+                backoff = sum(self.recovery.backoff(i)
+                              for i in range(attempts)) \
+                    if attempts and self.recovery is not None else 0.0
+                ch_start = max(self._now, self._restore_free)
+                done = ch_start + stall + xfer + backoff
+                # deadline-slack shed rule (core/recovery.py): when the
+                # restore cannot land inside the requester's remaining
+                # TTFT budget, give the channel to winnable work and
+                # fall back to recompute
+                if (self.recovery is not None and req is not None
+                        and self.recovery.should_shed(
+                            req.slo_ttft - (self._now - req.t0()),
+                            done - self._now)):
+                    self._cancel_new_restores(alloc, new, e)
+                    self.stats.restore_sheds += 1
+                    self.stats.restore_retries += attempts
+                    new = 0
+                else:
+                    self._restore_free = done
+                    if self.copier is not None:
+                        for hslot, page in planned:
+                            self.copier.restore(hslot, page)
+                    if self.tracer.enabled:
+                        self.tracer.complete(
+                            "restore-channel", f"restore x{new}", ch_start,
+                            done - ch_start, cat="restore",
+                            args={"pages": new, "rid": req.rid,
+                                  "retries": attempts, "stall_s": stall})
+                    self.stats.restore_seconds += xfer
+                    self.stats.restore_retries += attempts
+                    for hslot, kind, obj in self._restores[-new:]:
+                        if kind == "node":
+                            obj.ready_at = done
+                        else:                     # tail (only if tail_new)
+                            e.tail_ready = done
+                    self._next_restore = min(self._next_restore, done)
+                    ready = max(ready, done)
         if ready >= 0.0:
             req.spill_wait = ready
             self.stats.restore_holds += 1
             self._reserved[req.rid] = (ready + 60.0, frozenset(protect))
             return True
         return False
+
+    def _cancel_new_restores(self, alloc, new: int, e) -> None:
+        """Unwind the trailing ``new`` restores of a run that never
+        dispatched (hard fault after retries, or shed): reserved pages
+        return to the free list, slots go back AT REST — the inverse of
+        the reservation walk, no copy was ever issued."""
+        for hslot, kind, obj in self._restores[-new:]:
+            ok = alloc.restore_cancel(hslot)
+            assert ok, f"cancel of slot {hslot} found no restore in flight"
+            if kind == "node":
+                self.prefix.mark_spilled(obj, hslot)
+            else:
+                e.tail_page = None
+                e.tail_ready = -1.0
+        del self._restores[-new:]
 
     def _reserve_page(self, alloc, hslot: int, protect) -> Optional[int]:
         page = alloc.restore_begin(hslot)
@@ -644,6 +782,7 @@ class KvRetention:
             return False
         if self.copier is not None:
             self.copier.spill(node.page, h)
+        self._stamp_checksum(h)
         self.prefix.mark_spilled(node, h)
         self.stats.pages_spilled += 1
         self.stats.spill_seconds += self.spill_seconds_per_page
@@ -665,6 +804,7 @@ class KvRetention:
             return False
         if self.copier is not None:
             self.copier.spill(e.tail_page, h)
+        self._stamp_checksum(h)
         e.tail_page = None
         e.tail_hslot = h
         e.expires_at = math.inf        # demoted: host LRU owns it now
@@ -708,6 +848,36 @@ class KvRetention:
                 self._drop_host_slot(alloc, victim.tail_hslot)
         return True
 
+    # --------------------------------------------- recovery / drain hooks --
+    def cancel_hold(self, req, timeout: bool = True) -> None:
+        """A held request abandons its parked restore — the restore
+        timeout fired (stalled channel) or the loop is draining: drop
+        its anti-thrash reservation and any session claim so it
+        re-enters the queue COLD.  In-flight restores stay owned by the
+        layer — if the copies ever land, the pages become ordinary
+        retained pages a later admission can hit."""
+        self._reserved.pop(req.rid, None)
+        self.abort(req)
+        if timeout:
+            self.stats.restore_timeouts += 1
+            if self.tracer.enabled:
+                self.tracer.instant("restore-channel", "hold-timeout",
+                                    self._now, cat="fault",
+                                    args={"rid": req.rid})
+
+    def demote_all(self, alloc) -> int:
+        """Drain (core/recovery.py): demote every live session tail
+        device->host so retained transcripts survive device teardown —
+        the host tier is the designated survivor of device loss.
+        Returns tails demoted."""
+        n = 0
+        for e in list(self.sessions.values()):
+            if e.tail_page is not None and e.tail_hslot is None \
+                    and e.claimed_by is None \
+                    and self._spill_tail(alloc, e):
+                n += 1
+        return n
+
     def clear(self, alloc) -> int:
         """Unpin everything — every session tail (committing in-flight
         restores, returning host slots), then the whole radix.
@@ -717,6 +887,7 @@ class KvRetention:
             freed += self._drop_session(alloc, sid, expired=False)
         self._restores.clear()
         self._next_restore = math.inf
+        self._checksums.clear()
         return freed + self.prefix.clear(alloc)
 
 

@@ -48,6 +48,8 @@ import numpy as np
 
 from .batcher import FormedBatch
 from .monitor import _nearest_rank
+from .recovery import (DEFAULT_RECOVERY, LoopCheckpoint, RecoveryPolicy,
+                       build_checkpoint)
 from .request import Request
 from .telemetry import (NULL_TRACER, WAIT_PHASES, LatencyLedger,
                         blame_means)
@@ -141,6 +143,8 @@ class PrefillJob:
     next_chunk: int = 0
     started_at: float = -1.0
     handle: object = None                    # backend-private chunk state
+    fault_attempts: int = 0                  # injected chunk faults absorbed
+    faulted: bool = False                    # ledgers parked in fault_retry
 
     @property
     def done(self) -> bool:
@@ -293,6 +297,17 @@ class ServeResult:
     batch_padding_fractions: List[float] = dataclasses.field(
         default_factory=list)
     batch_homogeneity: List[float] = dataclasses.field(default_factory=list)
+    # ---- fault/recovery plane (core/faults.py, core/recovery.py) ----
+    fault_events: int = 0            # injected faults absorbed by the loop
+    fault_retries: int = 0           # backoff retries (prefill/decode)
+    fault_kills: int = 0             # decode pools killed after max retries
+    quarantined: int = 0             # poisoned requests dropped (ledger-closed)
+    restore_stalls: int = 0          # injected restore-channel stalls
+    restore_retries: int = 0         # restore-channel retries (backoff)
+    restore_failures: int = 0        # restore runs abandoned after retries
+    restore_sheds: int = 0           # restores shed by the slack rule
+    restore_timeouts: int = 0        # held requests unparked by the timeout
+    corruptions: int = 0             # host-slot checksum mismatches caught
 
     def finished(self):
         return [r for r in self.requests if r.finished >= 0]
@@ -465,6 +480,12 @@ class _LoopState:
     util_t: float = 0.0
     pad_fracs: List[float] = dataclasses.field(default_factory=list)
     homog: List[float] = dataclasses.field(default_factory=list)
+    # fault/recovery counters (core/faults.py)
+    faults: int = 0
+    retries: int = 0
+    kills: int = 0
+    quarantined: int = 0
+    restore_timeouts: int = 0
 
 
 # ---------------------------------------------------------------- config --
@@ -481,6 +502,11 @@ class LoopConfig:
     # (bounded, parallel) instead of re-decoding it (serial).  None
     # disables (legacy full-restart preemption).  Disagg mode only.
     slice_tokens: Optional[int] = None
+    # restore-hold timeout (DESIGN.md §9, satellite of the fault plane
+    # but active in EVERY run): a request parked on a host->device
+    # restore for longer than this re-enters the queue COLD — a stalled
+    # PCIe channel costs a re-prefill, never a hang.  <= 0 disables.
+    restore_timeout: float = 30.0
 
 
 # ------------------------------------------------------------------ loop --
@@ -489,15 +515,26 @@ class ServingLoop:
 
     def __init__(self, scheduler, backend: ExecutionBackend,
                  config: LoopConfig = LoopConfig(), recorder=None,
-                 tracer=None):
+                 tracer=None, faults=None,
+                 recovery: Optional[RecoveryPolicy] = None):
         assert config.mode in ("disagg", "coupled", "static"), config.mode
         # slice resume re-enters through chunked prefill + transfer/join;
         # the fused loops stamp first_token/generated unconditionally
         assert config.slice_tokens is None or config.mode == "disagg", \
             "slice-boundary preemption requires the disagg topology"
+        # the decode-step/prefill-chunk injection sites live on the
+        # overlapped executors; chaos runs use the disagg topology
+        assert faults is None or config.mode == "disagg", \
+            "fault injection requires the disagg topology"
         self.sched = scheduler
         self.backend = backend
         self.cfg = config
+        # fault-injection / recovery plane (core/faults.py, DESIGN.md
+        # §9).  The policy is ALWAYS armed (the restore-hold timeout
+        # protects fault-free runs too); the injector defaults off.
+        self._faults = faults
+        self._recovery = recovery if recovery is not None \
+            else DEFAULT_RECOVERY
         # optional TraceRecorder (data/trace.py): pristine request
         # snapshots after backend.begin + the run's dispatch/requeue/
         # turn event log (the replay bit-identity surface)
@@ -509,26 +546,40 @@ class ServingLoop:
 
     # ------------------------------------------------------------- run ----
     def run(self, requests: List[Request], time_limit: float = 3600.0,
-            max_wall_s: Optional[float] = None) -> ServeResult:
+            max_wall_s: Optional[float] = None,
+            drain_at: Optional[float] = None,
+            resume_clock: Optional[float] = None) -> ServeResult:
         # Later session turns are HELD until their predecessor finishes
         # — only then can their prompt (prior transcript + utterance) be
-        # composed and their arrival (finish + think gap) be known.
+        # composed and their arrival (finish + think gap) be known.  A
+        # turn whose tokens are ALREADY composed needs no predecessor:
+        # it was unlocked before a checkpointed drain (its predecessor
+        # finished pre-drain and is absent here), so it re-enters as a
+        # plain arrival with its recorded think-gap arrival time.
         self._held: Dict[Tuple[int, int], Request] = {
             (r.session_id, r.turn): r for r in requests
-            if r.session_id is not None and r.turn > 0}
+            if r.session_id is not None and r.turn > 0
+            and r.tokens is None}
         self._arrivals = sorted(
             (r for r in requests
-             if r.session_id is None or r.turn == 0),
+             if r.session_id is None or r.turn == 0
+             or r.tokens is not None),
             key=lambda r: r.arrival)
+        self._requests = requests                # drain() snapshots these
         self._n = len(requests)
         self._max_wall_s = max_wall_s
+        self._drain_at = drain_at
+        self._drained: Optional[LoopCheckpoint] = None
+        self._drain_demoted = 0
         self.pool: List[Request] = []
         self.pending_join: List[list] = []       # [ready_time, request]
         # restore-in-flight requests, PARKED (not re-prefilled) until
-        # their host->device copy lands: [spill_wait, request]
+        # their host->device copy lands: [ready, request, held_since]
         self._held_restore: List[list] = []
         self._spill_seen = (0, 0)                # (spilled, restored) fed
         self.job: Optional[PrefillJob] = None
+        self._decode_fault_attempts = 0          # consecutive decode faults
+        self._decode_faulted = False             # pool needs a re-stamp
         self.st = _LoopState(kv_budget=self.backend.kv_budget_tokens())
         self._last_util = -1.0                   # last emitted kv counter
         # fresh ledgers: phase stamping starts from a clean slate even
@@ -536,6 +587,40 @@ class ServingLoop:
         for r in requests:
             r.ledger = LatencyLedger()
         self.backend.begin(requests)
+        rebase = 0.0
+        if resume_clock is not None:
+            if self.backend.clock.virtual:
+                # cold resume from a LoopCheckpoint: continue at the
+                # drain clock so resumed timings compose with pre-drain
+                # anchors
+                self.backend.clock.advance(resume_clock)
+            else:
+                # a wall clock cannot jump to the drain time: instead
+                # rebase every checkpoint-frame stamp (anchors,
+                # arrivals) into THIS clock's frame — deadlines and
+                # think gaps are relative ages, so shifting both ends
+                # preserves them exactly (AFTER begin: it restarts the
+                # wall clock)
+                rebase = self.backend.clock.now() - resume_clock
+        for r in requests:
+            if rebase:
+                r.arrival += rebase
+                if r.t0_anchor >= 0.0:
+                    r.t0_anchor = r.t0_anchor + rebase
+            # resumed requests carry their ORIGINAL first-arrival anchor
+            # across the checkpoint boundary: deadlines survive a drain
+            if r.t0_anchor >= 0.0:
+                r.ledger.start(r.t0_anchor)
+        # arm the fault/recovery seam on the retention layer AFTER begin
+        # (backends rebuild retention there).  Recovery is armed only
+        # with an injector — the fault-free restore path stays priced by
+        # the channel model alone; the LOOP-level restore-hold timeout
+        # (cfg.restore_timeout) protects every run regardless.
+        if self._faults is not None:
+            rt_f = getattr(self.backend, "retention", None)
+            if rt_f is not None:
+                rt_f.faults = self._faults
+                rt_f.recovery = self._recovery
         # deadline-slack sacrifice wiring (DESIGN.md §8): when the
         # scheduler is slack-aware, every sacrifice point — decode
         # victim choice, retention eviction rungs, restore-hold release
@@ -595,7 +680,12 @@ class ServingLoop:
                          spill_time_total=rt.stats.spill_seconds,
                          restore_time_total=rt.stats.restore_seconds,
                          spilled_bytes=rt.stats.bytes_spilled,
-                         restored_bytes=rt.stats.bytes_restored)
+                         restored_bytes=rt.stats.bytes_restored,
+                         restore_stalls=rt.stats.restore_stalls,
+                         restore_retries=rt.stats.restore_retries,
+                         restore_failures=rt.stats.restore_failures,
+                         restore_sheds=rt.stats.restore_sheds,
+                         corruptions=rt.stats.corruptions)
         return ServeResult(
             requests=requests, makespan=self.backend.clock.now(),
             busy_prefill=st.busy_p, busy_decode=st.busy_d,
@@ -611,7 +701,74 @@ class ServingLoop:
             kv_util_time_weighted=st.util_acc
             / max(self.backend.clock.now(), 1e-9),
             batch_padding_fractions=st.pad_fracs,
-            batch_homogeneity=st.homog, **extra)
+            batch_homogeneity=st.homog,
+            fault_events=st.faults, fault_retries=st.retries,
+            fault_kills=st.kills, quarantined=st.quarantined,
+            restore_timeouts=st.restore_timeouts, **extra)
+
+    # ------------------------------------------------- drain / resume -----
+    def drain(self) -> LoopCheckpoint:
+        """Checkpointed drain (DESIGN.md §9): quiesce every in-flight
+        request WORK-PRESERVINGLY — pooled decodes yield at their last
+        slice boundary, transfer-waits and mid-prefill rows fold back
+        onto their preserved prompts, parked restores abandon their
+        holds — demote live session tails to the host tier, and emit
+        the serializable checkpoint a COLD loop ``resume``s from.
+        Call after ``run(..., drain_at=t)`` returned."""
+        now = self.backend.clock.now()
+        evict = getattr(self.backend, "evict_request", None)
+        for r in list(self.pool):
+            self.pool.remove(r)
+            self.sched.release_decode(r)
+            if evict is not None:
+                evict(r)
+            self._yield_or_reset(r)
+        for item in list(self.pending_join):
+            r = item[1]
+            self.sched.release_decode(r)   # admitted at prefill end
+            if evict is not None:
+                evict(r)
+            self._yield_or_reset(r)
+        self.pending_join.clear()
+        if self.job is not None:
+            abort = getattr(self.backend, "abort_prefill", None)
+            for r in self.job.batch.requests:
+                if abort is not None:
+                    abort(r)
+                self._yield_or_reset(r)
+            self.job = None
+        rt = getattr(self.backend, "retention", None)
+        for item in list(self._held_restore):
+            r = item[1]
+            r.spill_wait = -1.0
+            if rt is not None:
+                rt.cancel_hold(r, timeout=False)
+        self._held_restore.clear()
+        self._drain_demoted = 0
+        alloc = getattr(self.backend, "alloc", None)
+        if rt is not None and alloc is not None:
+            self._drain_demoted = rt.demote_all(alloc)
+        ck = build_checkpoint(self, now)
+        self._drained = ck
+        if self.tracer.enabled:
+            self.tracer.instant("loop", "drain", now, cat="drain",
+                                args={"requests": len(ck.requests),
+                                      "held_turns": len(ck.held_turns),
+                                      "tails_demoted": ck.tails_demoted})
+        return ck
+
+    def resume(self, ck: LoopCheckpoint, time_limit: float = 3600.0,
+               max_wall_s: Optional[float] = None) -> ServeResult:
+        """Continue a drained run on THIS loop (typically a cold one in
+        a new process): the checkpoint's requests re-enter in original
+        arrival order carrying their deadline anchors, and the clock
+        starts at the drain time so post-resume stamps compose with
+        pre-drain anchors.  Preserved work re-prefills from each
+        request's prompt — continuation token ids are bit-identical to
+        the undrained run (the PR 9 slice-resume argument, applied
+        across a process boundary)."""
+        return self.run(ck.restore_requests(), time_limit=time_limit,
+                        max_wall_s=max_wall_s, resume_clock=ck.now)
 
     # ------------------------------------------------------------ shared --
     def _wall_exceeded(self) -> bool:
@@ -670,16 +827,17 @@ class ServingLoop:
         ``cause`` picks the ledger phase the coming wait is blamed on:
         "clamp" -> ``admission_block`` (bounced off a slot/page limit),
         "restore" -> back to plain ``queue`` (the hold itself was
-        already accounted as ``restore_hold``), "oom"/"preempt" -> the
-        restart-penalty ``requeue_gap``, which begins at ``at`` (the
-        eviction instant), not at the post-penalty re-arrival ``t``."""
+        already accounted as ``restore_hold``), "oom"/"preempt"/"fault"
+        -> the restart-penalty ``requeue_gap``, which begins at ``at``
+        (the eviction instant), not at the post-penalty re-arrival
+        ``t``."""
         led = r.ledger
         if led is not None and led.started and not led.closed:
             if cause == "clamp":
                 led.to("admission_block", at if at is not None else t)
             elif cause == "restore":
                 led.to("queue", at if at is not None else t)
-            else:                                    # oom | preempt
+            else:                                    # oom | preempt | fault
                 led.gap(at if at is not None else t, r.arrival)
         self.sched.on_arrival(r, t, requeue=True)
         if self.recorder is not None:
@@ -784,7 +942,16 @@ class ServingLoop:
         self._note_util(now)
         m = getattr(self.backend, "maintain", None)
         if m is not None:
-            m(now)
+            if self._faults is not None \
+                    and self._faults.fire("maintain_tick"):
+                # maintain-tick clock hiccup: this housekeeping tick is
+                # lost.  TTL expiry and spill/restore completion polling
+                # are deadline-idempotent, so a skipped tick only delays
+                # them to the next iteration — which is the invariant
+                # the chaos suite pins down.
+                self.st.faults += 1
+            else:
+                m(now)
         rt = getattr(self.backend, "retention", None)
         mon = getattr(self.sched, "monitor", None)
         if rt is not None and mon is not None:
@@ -838,7 +1005,25 @@ class ServingLoop:
         Under a slack-aware scheduler the batch of due releases re-enters
         tightest-budget first, so a same-tick admission race between two
         resumed requests is settled in deadline order."""
-        due = [item for item in self._held_restore if item[0] <= now]
+        timeout = self.cfg.restore_timeout
+        due, timed_out = [], []
+        for item in self._held_restore:
+            if item[0] <= now:
+                due.append(item)
+            elif timeout > 0 and now >= item[2] + timeout:
+                timed_out.append(item)
+        for item in timed_out:
+            # restore-hold timeout (DESIGN.md §9): the channel never
+            # delivered — abandon the claimed restore and re-enter COLD.
+            # A stalled PCIe link costs a re-prefill, never a hang.
+            self._held_restore.remove(item)
+            r = item[1]
+            r.spill_wait = -1.0
+            rt = getattr(self.backend, "retention", None)
+            if rt is not None:
+                rt.cancel_hold(r)
+            self.st.restore_timeouts += 1
+            self._requeue(r, now, cause="restore")
         if not due:
             return
         if getattr(self, "_slack_aware", False):
@@ -889,7 +1074,7 @@ class ServingLoop:
                     # would throw away restorable KV
                     if r.ledger is not None:
                         r.ledger.to("restore_hold", now)
-                    self._held_restore.append([r.spill_wait, r])
+                    self._held_restore.append([r.spill_wait, r, now])
                 else:
                     self._requeue(r, now)
             if n_blk == 0:
@@ -948,41 +1133,10 @@ class ServingLoop:
         the next turn's prompt composition assumes an unsliced
         transcript shape (``_unlock_next_turn``)."""
         victims = self.backend.decode_preempt(self.pool)
-        K = self.cfg.slice_tokens
         for r in victims:
             self.pool.remove(r)
             self.sched.release_decode(r)
-            keep = (r.generated // K) * K if K else 0
-            sliced = keep > 0 and r.session_id is None
-            if sliced:
-                # promote the newly preserved span into the prompt;
-                # everything up to r.sliced_tokens was promoted by an
-                # earlier yield and already sits inside tokens[:prompt_len]
-                if r.tokens is not None:
-                    gen = np.asarray(self.backend.generated_tokens(r),
-                                     dtype=np.int32)
-                    r.tokens = np.concatenate([
-                        np.asarray(r.tokens[:r.prompt_len], dtype=np.int32),
-                        gen[r.sliced_tokens:keep]])
-                r.prompt_len += keep - r.sliced_tokens
-                r.sliced_tokens = keep
-                r.generated = keep
-                # first_token survives: the tokens that defined it are
-                # preserved, so TTFT stands and the preemption delay
-                # lands on TPOT — exactly what slack accounting wants
-                hook = getattr(self.backend, "on_slice_yield", None)
-                if hook is not None:
-                    hook(r, keep)
-                self.st.slice_yields += 1
-            else:
-                reset = getattr(self.backend, "on_preempt_reset", None)
-                if reset is not None:
-                    reset(r)
-                r.generated = 0
-                r.first_token = -1.0
-            r.prefill_start = -1.0
-            r.prefix_hit_tokens = 0       # re-matched at the next admission
-            r.session_hit_tokens = 0
+            sliced = self._yield_or_reset(r)
             r.arrival = now + self.cfg.restart_penalty
             self._requeue(r, r.arrival, cause="preempt", at=now)
             self.st.preempts += 1
@@ -990,8 +1144,116 @@ class ServingLoop:
                 self.tracer.instant(
                     "decode", "slice-yield" if sliced else "preempt", now,
                     cat="preempt",
-                    args={"rid": r.rid, "kept_tokens": keep})
+                    args={"rid": r.rid,
+                          "kept_tokens": r.sliced_tokens if sliced else 0})
         return bool(victims)
+
+    def _yield_or_reset(self, r: Request) -> bool:
+        """Work-preservation core shared by preemption, the decode-pool
+        fault kill, and checkpointed drain: yield ``r`` at its last
+        K-aligned slice boundary — generated tokens up to the boundary
+        are promoted into the prompt (``Request.sliced_tokens`` tracks
+        the split), so the re-queued request re-PREFILLS the preserved
+        work at identical absolute positions and the continuation stays
+        bit-identical — or reset it to scratch when slicing is off, no
+        boundary is reached, or it is a session turn (the next turn's
+        prompt composition assumes an unsliced transcript shape).
+        Returns True when work was preserved.  The CALLER owns queue
+        and backend slot/page disposition."""
+        K = self.cfg.slice_tokens
+        keep = (r.generated // K) * K if K else 0
+        sliced = keep > 0 and r.session_id is None
+        if sliced:
+            # promote the newly preserved span into the prompt;
+            # everything up to r.sliced_tokens was promoted by an
+            # earlier yield and already sits inside tokens[:prompt_len]
+            if r.tokens is not None:
+                gen = np.asarray(self.backend.generated_tokens(r),
+                                 dtype=np.int32)
+                r.tokens = np.concatenate([
+                    np.asarray(r.tokens[:r.prompt_len], dtype=np.int32),
+                    gen[r.sliced_tokens:keep]])
+            r.prompt_len += keep - r.sliced_tokens
+            r.sliced_tokens = keep
+            r.generated = keep
+            # first_token survives: the tokens that defined it are
+            # preserved, so TTFT stands and the preemption delay
+            # lands on TPOT — exactly what slack accounting wants
+            hook = getattr(self.backend, "on_slice_yield", None)
+            if hook is not None:
+                hook(r, keep)
+            self.st.slice_yields += 1
+        else:
+            reset = getattr(self.backend, "on_preempt_reset", None)
+            if reset is not None:
+                reset(r)
+            r.generated = 0
+            r.first_token = -1.0
+        r.prefill_start = -1.0
+        r.prefix_hit_tokens = 0       # re-matched at the next admission
+        r.session_hit_tokens = 0
+        return sliced
+
+    def _abandon_job(self, job: PrefillJob, now: float) -> None:
+        """Retry budget exhausted on a prefill job: free its partial
+        backend state (``abort_prefill`` — NOT ``release``, which would
+        register garbage partial KV with the retention layer) and
+        disposition the rows.  Poisoned rows (``fault_streak`` at the
+        quarantine threshold) are dropped terminally with their ledgers
+        closed — a single unservable request can never kill the loop —
+        the rest re-enter the queue cold after the restart penalty.
+        Work already promoted into a row's prompt by earlier slice
+        yields survives: only the un-prefilled remainder is redone."""
+        abort = getattr(self.backend, "abort_prefill", None)
+        for r in job.batch.requests:
+            if abort is not None:
+                abort(r)
+            r.prefill_start = -1.0
+            r.prefix_hit_tokens = 0
+            r.session_hit_tokens = 0
+            if r.fault_streak >= self._recovery.quarantine_after:
+                r.dropped = True
+                r.quarantined = True
+                r.finished = -1.0
+                self.st.quarantined += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "prefill", "quarantine", now, cat="fault",
+                        args={"rid": r.rid, "streak": r.fault_streak})
+                self._retire(r, now)
+            else:
+                r.arrival = now + self.cfg.restart_penalty
+                self._requeue(r, r.arrival, cause="fault", at=now)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefill", "job-abandoned", now, cat="fault",
+                args={"rows": job.batch.size,
+                      "attempts": job.fault_attempts})
+        self.job = None
+
+    def _kill_decode_pool(self, now: float) -> None:
+        """Decode executor declared dead for this pool (consecutive
+        fault budget exhausted): WORK-PRESERVING kill.  Every pooled
+        request yields at its last slice boundary (or resets), its
+        backend slot/pages are torn down via ``evict_request``, and it
+        re-enters the queue — the loop outlives the device error."""
+        st = self.st
+        st.kills += 1
+        n = len(self.pool)
+        evict = getattr(self.backend, "evict_request", None)
+        for r in list(self.pool):
+            self.pool.remove(r)
+            self.sched.release_decode(r)
+            if evict is not None:
+                evict(r)
+            self._yield_or_reset(r)
+            r.arrival = now + self.cfg.restart_penalty
+            self._requeue(r, r.arrival, cause="fault", at=now)
+        self._decode_faulted = False
+        self._decode_fault_attempts = 0
+        if self.tracer.enabled:
+            self.tracer.instant("decode", "pool-kill", now, cat="fault",
+                                args={"victims": n})
 
     def _advance_pool(self, end: float) -> None:
         """One token for every pooled request; retire finished ones."""
@@ -1016,6 +1278,15 @@ class ServingLoop:
             return self._arrivals[self.st.ai].arrival
         return None
 
+    def _held_wakeups(self) -> List[float]:
+        """Clock targets for parked restores: the copy's ready time or
+        the hold timeout, whichever comes first — the idle advance must
+        never jump past the timeout to a stalled channel's far-future
+        ready stamp."""
+        to = self.cfg.restore_timeout
+        return [min(it[0], it[2] + to) if to > 0 else it[0]
+                for it in self._held_restore]
+
     # -------------------------------------------- disagg (overlapped) -----
     def _run_overlapped(self, time_limit: float) -> None:
         """Separate prefill/decode executors (+ KV transfer between).  On
@@ -1028,6 +1299,8 @@ class ServingLoop:
             if self._wall_exceeded():
                 break
             now = clock.now()
+            if self._drain_at is not None and now >= self._drain_at:
+                break                      # caller drains to a checkpoint
             self._maintain(now)
             self._release_held(now)
             self._admit_arrivals(now)
@@ -1062,7 +1335,7 @@ class ServingLoop:
                           decode_free if self.pool else None,
                           self._next_arrival()]
                          + [it[0] for it in self.pending_join]
-                         + [it[0] for it in self._held_restore]
+                         + self._held_wakeups()
                          if c is not None and c > now]
                 if cands:
                     clock.advance(min(cands))
@@ -1078,14 +1351,43 @@ class ServingLoop:
 
     def _run_chunk(self, job: PrefillJob, now: float) -> float:
         """Execute the job's next prefill chunk; on the last chunk stamp
-        first-token times and hand requests to transfer/decode."""
+        first-token times and hand requests to transfer/decode.
+
+        Fault seam (DESIGN.md §9): an injected ``prefill_chunk`` fault
+        costs a backoff'd retry of the SAME chunk; past the retry budget
+        the whole job is abandoned (``_abandon_job``) — poisoned rows
+        quarantined, the rest re-queued cold."""
         st, sched, batch = self.st, self.sched, job.batch
+        if self._faults is not None and self._faults.fire("prefill_chunk"):
+            st.faults += 1
+            job.fault_attempts += 1
+            job.faulted = True
+            for r in batch.requests:
+                r.fault_streak += 1
+                if r.ledger is not None and not r.ledger.closed:
+                    r.ledger.to("fault_retry", now)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "prefill", "chunk-fault", now, cat="fault",
+                    args={"attempt": job.fault_attempts,
+                          "rows": batch.size})
+            if job.fault_attempts > self._recovery.max_retries:
+                self._abandon_job(job, now)
+                return now
+            st.retries += 1
+            return now + self._recovery.backoff(job.fault_attempts - 1)
+        stamp = job.started_at < 0 or job.faulted
         if job.started_at < 0:
             job.started_at = now
             for r in batch.requests:
                 r.prefill_start = now
-                if r.ledger is not None:
+        if stamp:
+            for r in batch.requests:
+                if job.faulted:
+                    r.fault_streak = 0       # survived: streak broken
+                if r.ledger is not None and not r.ledger.closed:
                     r.ledger.to("prefill", now)
+            job.faulted = False
         idx = job.next_chunk
         dur = self.backend.prefill_chunk(job, idx)
         job.next_chunk += 1
@@ -1151,6 +1453,40 @@ class ServingLoop:
 
     def _run_decode_iter(self, now: float) -> float:
         st = self.st
+        if self._faults is not None and self._faults.fire("decode_step"):
+            # transient decode-step device error: the whole iteration is
+            # lost; pooled ledgers park in fault_retry until a step
+            # lands.  Past the consecutive-retry budget the pool is
+            # killed work-preservingly instead of spinning forever.
+            st.faults += 1
+            self._decode_fault_attempts += 1
+            self._decode_faulted = True
+            # wall clocks advance DURING a loop iteration (a prefill
+            # finishing first stamps joiners with fresh samples): clamp
+            # so fault stamps never run backwards on a joiner's ledger
+            now = max(now, self.backend.clock.now())
+            for r in self.pool:
+                if r.ledger is not None and not r.ledger.closed:
+                    r.ledger.to("fault_retry", now)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "decode", "decode-fault", now, cat="fault",
+                    args={"attempt": self._decode_fault_attempts,
+                          "pool": len(self.pool)})
+            if self._decode_fault_attempts > self._recovery.max_retries:
+                self._kill_decode_pool(now)
+                return now
+            st.retries += 1
+            return now + self._recovery.backoff(
+                self._decode_fault_attempts - 1)
+        if self._decode_faulted:
+            # a step landed: streak broken, ledgers resume decode
+            self._decode_faulted = False
+            self._decode_fault_attempts = 0
+            ts = max(now, self.backend.clock.now())   # see fault clamp
+            for r in self.pool:
+                if r.ledger is not None and not r.ledger.closed:
+                    r.ledger.to("decode", ts)
         n = len(self.pool)
         dur = self.backend.decode_iter(self.pool, self._live_tokens(self.pool))
         end = self._after(now, dur)
@@ -1182,6 +1518,8 @@ class ServingLoop:
             if self._wall_exceeded():
                 break
             now = clock.now()
+            if self._drain_at is not None and now >= self._drain_at:
+                break                      # caller drains to a checkpoint
             self._maintain(now)
             self._release_held(now)
             self._admit_arrivals(now)
@@ -1199,7 +1537,7 @@ class ServingLoop:
                     self._run_batch_to_completion(batch, now)
                 else:
                     cands = [c for c in [self._next_arrival()]
-                             + [it[0] for it in self._held_restore]
+                             + self._held_wakeups()
                              if c is not None and c > now]
                     if sched.queued():
                         cands.append(now + self.cfg.tick)
@@ -1209,7 +1547,7 @@ class ServingLoop:
 
             if batch is None and not self.pool:
                 cands = [c for c in [self._next_arrival()]
-                         + [it[0] for it in self._held_restore]
+                         + self._held_wakeups()
                          if c is not None and c > now]
                 clock.advance(min(cands) if cands else now + self.cfg.tick)
                 continue

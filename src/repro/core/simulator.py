@@ -34,6 +34,7 @@ import numpy as np
 from repro.models.config import ModelConfig
 from . import paging
 from .batcher import FormedBatch
+from .faults import FaultInjector
 from .prefix_cache import PrefixCache
 from .request import Request
 from .retention import KvRetention, maintain_backend
@@ -302,6 +303,23 @@ class CostModelBackend:
     def on_preempt_reset(self, req: Request) -> None:
         pass
 
+    # ------------------------------------------- fault/drain teardown -----
+    def abort_prefill(self, req: Request) -> None:
+        """A mid-prefill request leaves before its KV enters service
+        (prefill-job abandon, checkpointed drain): free its pages
+        OUTRIGHT — never through ``release``, which would register a
+        garbage partial transcript with the retention layer."""
+        if self.paged:
+            self.alloc.release(req.rid)     # idempotent: no-table is a no-op
+
+    def evict_request(self, req: Request) -> None:
+        """Tear down a pooled request's KV without retention
+        registration — the decode-pool kill / drain analogue of a
+        preemption victim's teardown (which ``extend_for_decode`` does
+        inside the backend)."""
+        if self.paged:
+            self.alloc.release(req.rid)
+
     def chunk_plan(self, batch: FormedBatch) -> List[Tuple[int, int]]:
         # same gate as the real engine (cfg.chunkable_prefill) so the two
         # backends schedule identically for ring-cache/VLM configs
@@ -401,7 +419,9 @@ class Simulator:
                  spill_bw: float = 16e9,
                  spill_dtype: str = "",
                  slice_tokens: Optional[int] = None,
-                 recorder=None, tracer=None):
+                 recorder=None, tracer=None,
+                 fault_plan=None, recovery=None,
+                 restore_timeout: float = 30.0):
         assert mode in ("disagg", "coupled", "static")
         prefix_cache = prefix_cache or session_ttl is not None
         # static mode runs a batch to completion without per-iteration
@@ -428,12 +448,22 @@ class Simulator:
             prefix_cache=prefix_cache, session_ttl=session_ttl,
             host_pool_tokens=host_pool_tokens, spill_bw=spill_bw,
             spill_dtype=spill_dtype)
+        # fault-injection plane (core/faults.py): a FaultPlan is turned
+        # into a per-run injector HERE so the facade owns the arming —
+        # passing a plan with no armed site is the same as passing None
+        faults = None
+        if fault_plan is not None and fault_plan.any_armed:
+            faults = FaultInjector(fault_plan)
+        self.faults = faults
         self.loop = ServingLoop(scheduler, self.backend, LoopConfig(
             mode=mode, decode_slot_cap=decode_slot_cap,
             restart_penalty=restart_penalty, tick=tick,
-            slice_tokens=slice_tokens),
-            recorder=recorder, tracer=tracer)
+            slice_tokens=slice_tokens, restore_timeout=restore_timeout),
+            recorder=recorder, tracer=tracer,
+            faults=faults, recovery=recovery)
 
-    def run(self, requests: List[Request],
-            time_limit: float = 3600.0) -> SimResult:
-        return self.loop.run(requests, time_limit=time_limit)
+    def run(self, requests: List[Request], time_limit: float = 3600.0,
+            drain_at: Optional[float] = None,
+            resume_clock: Optional[float] = None) -> SimResult:
+        return self.loop.run(requests, time_limit=time_limit,
+                             drain_at=drain_at, resume_clock=resume_clock)

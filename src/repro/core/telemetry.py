@@ -51,12 +51,18 @@ from typing import Dict, List, Optional, Tuple
 #:   transfer        — prefill->decode KV transfer + decode-slot wait
 #:                     (disagg topology only)
 #:   decode          — live in the decode pool until finish/preemption
+#:   fault_retry     — stalled on an injected/substrate fault while the
+#:                     recovery policy backs off and retries (core/
+#:                     faults.py); zero in a fault-free run
 PHASES = ("queue", "admission_block", "requeue_gap", "restore_hold",
-          "formed", "prefill", "transfer", "decode")
+          "formed", "prefill", "transfer", "decode", "fault_retry")
 
 #: Phases that are WAITING (scheduler-inflicted) rather than compute —
 #: the numerator of the latency-blame share the burst-tail gates read.
-WAIT_PHASES = ("queue", "admission_block", "requeue_gap", "restore_hold")
+#: Fault backoff counts as waiting: the request burned wall time without
+#: compute progressing.
+WAIT_PHASES = ("queue", "admission_block", "requeue_gap", "restore_hold",
+               "fault_retry")
 
 #: Conservation tolerance: phase sums are chains of float adds over the
 #: same stamps the end-to-end subtraction uses, so only accumulation

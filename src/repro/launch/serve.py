@@ -31,6 +31,7 @@ repro/sharding/partition.py.
 from __future__ import annotations
 
 import argparse
+import copy
 import dataclasses
 import time
 
@@ -40,6 +41,8 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.core import (BucketServeScheduler, GoodputScheduler,
                         MemoryBudget, SchedulerConfig)
 from repro.core.engine import ServingEngine
+from repro.core.faults import FaultPlan
+from repro.core.recovery import LoopCheckpoint
 from repro.core.simulator import A100X4, CostModel, Simulator
 from repro.core.telemetry import Tracer, validate_perfetto
 from repro.data.trace import TraceRecorder, TraceWorkload
@@ -103,8 +106,7 @@ def _finish_timeline(args, tracer) -> None:
           f"{args.trace_out} (open in ui.perfetto.dev)")
 
 
-def _run_sim(cfg, args, reqs, recorder=None, tracer=None):
-    """Cost-model pass over the identical workload (validation mode)."""
+def _make_sim(cfg, args, plan=None, recorder=None, tracer=None):
     hw = A100X4
     budget = MemoryBudget(hbm_bytes_per_device=hw.hbm_bytes,
                           n_devices=hw.decode_chips,
@@ -120,8 +122,29 @@ def _run_sim(cfg, args, reqs, recorder=None, tracer=None):
                     spill_bw=args.spill_bw * 1e9,
                     spill_dtype=args.spill_dtype,
                     slice_tokens=args.slice_tokens,
-                    recorder=recorder, tracer=tracer)
-    res = sim.run(reqs)
+                    recorder=recorder, tracer=tracer,
+                    fault_plan=plan)
+    return sim, sched
+
+
+def _fault_line(res, plan) -> str:
+    """Recovery counters under an armed plan — what the chaos smoke
+    greps; replays of the same SPEC must print this line verbatim."""
+    return (f"faults[{plan.spec()}]: {res.fault_events} injected, "
+            f"{res.fault_retries} retried, {res.fault_kills} killed, "
+            f"{res.quarantined} quarantined; restore channel: "
+            f"{res.restore_stalls} stalls, {res.restore_retries} retries, "
+            f"{res.restore_failures} failures, {res.restore_sheds} sheds, "
+            f"{res.restore_timeouts} timeouts, "
+            f"{res.corruptions} corruptions")
+
+
+def _run_sim(cfg, args, reqs, recorder=None, tracer=None, plan=None):
+    """Cost-model pass over the identical workload (validation mode)."""
+    sim, sched = _make_sim(cfg, args, plan, recorder, tracer)
+    # recovery backoff + restart penalties inflate virtual makespan
+    # under an armed plan — give the storm room to finish
+    res = sim.run(reqs, time_limit=40000.0 if plan is not None else 3600.0)
     prefix_info = ""
     if args.prefix_cache:
         prefix_info = (f"prefix hits {res.prefix_hits}/{res.prefix_lookups} "
@@ -152,7 +175,70 @@ def _run_sim(cfg, args, reqs, recorder=None, tracer=None):
     print(f"[sim] kv util (time-weighted) {res.kv_util_time_weighted:.2f}; "
           f"padding waste {res.padding_waste_ratio():.3f}; "
           f"blame {_fmt_blame(res.blame())}")
+    if plan is not None:
+        print(f"[sim] {_fault_line(res, plan)}")
     return res
+
+
+def _transcript(backend, r):
+    """Full token path: prompt (slice promotion included) + synthetic
+    generated continuation past the promoted boundary — the identity
+    the drain/resume smoke compares bit-for-bit."""
+    toks = [] if r.tokens is None else \
+        [int(t) for t in r.tokens[:r.prompt_len]]
+    gen = backend.generated_tokens(r)[r.sliced_tokens:]
+    return toks + [int(t) for t in gen]
+
+
+def _drain_resume_sim(cfg, args, reqs, plan):
+    """--drain-after smoke: reference run, a second run checkpointed at
+    T virtual seconds (drain -> JSON round-trip), then a COLD loop
+    resuming the checkpoint.  Every request must finish exactly once
+    across the drained+resumed pair with token ids bit-identical to the
+    uninterrupted reference, else exit nonzero (the CI gate greps the
+    identity line)."""
+    t = args.drain_after
+    ref_sim, _ = _make_sim(cfg, args, plan)
+    ref = ref_sim.run(copy.deepcopy(reqs), time_limit=40000.0)
+    want = {r.rid: _transcript(ref_sim.loop.backend, r)
+            for r in ref.requests if r.finished >= 0 and not r.dropped}
+
+    sim1, _ = _make_sim(cfg, args, plan)
+    res1 = sim1.run(copy.deepcopy(reqs), time_limit=40000.0, drain_at=t)
+    ck = LoopCheckpoint.from_json(sim1.loop.drain().to_json())
+    sim2, _ = _make_sim(cfg, args, plan)
+    res2 = sim2.run(ck.restore_requests(), time_limit=40000.0,
+                    resume_clock=ck.now)
+
+    done1 = {r.rid: r for r in res1.requests
+             if r.finished >= 0 and not r.dropped}
+    done2 = {r.rid: r for r in res2.requests
+             if r.finished >= 0 and not r.dropped}
+    print(f"[drain] checkpoint at t={ck.now:.2f}s: {len(done1)} finished "
+          f"pre-drain, {len(ck.requests)} in-flight/queued + "
+          f"{len(ck.held_turns)} held turns serialized, "
+          f"{len(done2)} finished after cold resume")
+    if plan is not None:
+        print(f"[drain] {_fault_line(res2, plan)}")
+    errs = []
+    if set(done1) & set(done2):
+        errs.append(f"duplicated rids {sorted(set(done1) & set(done2))}")
+    if set(done1) | set(done2) != set(want):
+        lost = set(want) - (set(done1) | set(done2))
+        extra = (set(done1) | set(done2)) - set(want)
+        errs.append(f"lost {sorted(lost)} / extra {sorted(extra)}")
+    for rid, r in done1.items():
+        if rid in want and _transcript(sim1.loop.backend, r) != want[rid]:
+            errs.append(f"rid {rid} diverged pre-drain")
+    for rid, r in done2.items():
+        if rid in want and _transcript(sim2.loop.backend, r) != want[rid]:
+            errs.append(f"rid {rid} diverged after resume")
+    if errs:
+        raise SystemExit("[drain] resume NOT work-preserving: "
+                         + "; ".join(errs))
+    print(f"[drain] drain-resume token ids identical "
+          f"({len(done1)}+{len(done2)}/{len(want)} requests, "
+          f"checkpoint {len(ck.to_json())} B)")
 
 
 def _fmt_blame(b) -> str:
@@ -279,7 +365,20 @@ def main():
                          "request keeps generated work up to the last "
                          "multiple of N tokens and resumes after "
                          "re-prefill instead of restarting")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="arm the deterministic fault injector "
+                         "(core/faults.py), e.g. 'seed=7,"
+                         "decode_step=0.02,restore_stall=0.3,stall_s=2'; "
+                         "identical SPECs replay bit-identically on "
+                         "either backend")
+    ap.add_argument("--drain-after", type=float, default=None, metavar="T",
+                    help="work-preserving drain/resume smoke (--backend "
+                         "sim): checkpoint a run at T virtual seconds, "
+                         "JSON round-trip, resume on a COLD loop and "
+                         "require token ids bit-identical to an "
+                         "uninterrupted reference")
     args = ap.parse_args()
+    plan = FaultPlan.parse(args.fault_plan) if args.fault_plan else None
     # an explicit host budget means the user wants the tier on — don't
     # silently discard their sizing because --kv-spill was omitted
     args.kv_spill = args.kv_spill or args.host_pool_tokens is not None
@@ -352,8 +451,15 @@ def main():
                                    or args.trace_replay) else None
     tracer = Tracer() if args.trace_out else None
 
+    if args.drain_after is not None:
+        if args.backend != "sim":
+            raise SystemExit("--drain-after is a cost-model smoke: "
+                             "use --backend sim")
+        _drain_resume_sim(cfg, args, reqs, plan)
+        return
+
     if args.backend == "sim":
-        _run_sim(cfg, args, reqs, recorder, tracer)
+        _run_sim(cfg, args, reqs, recorder, tracer, plan)
         _finish_trace(args, recorder)
         _finish_timeline(args, tracer)
         return
@@ -386,7 +492,8 @@ def main():
                            spill_bw=args.spill_bw * 1e9,
                            spill_dtype=args.spill_dtype,
                            slice_tokens=args.slice_tokens,
-                           recorder=recorder, tracer=tracer)
+                           recorder=recorder, tracer=tracer,
+                           fault_plan=plan)
 
     engine.submit(reqs)
     t0 = time.perf_counter()
@@ -433,6 +540,8 @@ def main():
           f"{engine.result.kv_util_time_weighted:.2f}; padding waste "
           f"{engine.result.padding_waste_ratio():.3f}; "
           f"blame {_fmt_blame(engine.result.blame())}")
+    if plan is not None:
+        print(_fault_line(engine.result, plan))
     _finish_trace(args, recorder)
     _finish_timeline(args, tracer)
 
